@@ -1,0 +1,99 @@
+"""Shared benchmark utilities: scene setup, semantic-quality metrics.
+
+Quality follows the paper's protocol (Sec. 4.5.2): ground-truth labels
+generate text queries against the constructed map; retrieved object point
+clouds are scored against GT objects with mean class recall (mAcc) and
+frequency-weighted point-IoU (F-mIoU analog, voxelized at 5 cm).
+"""
+from __future__ import annotations
+
+import sys
+import time
+from dataclasses import dataclass
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import Knobs, MappingServer
+from repro.core.query import query_server
+from repro.data.scenes import make_scene, scene_stream
+from repro.perception.embedder import OracleEmbedder
+
+EDIM = 256
+
+
+def default_knobs(**kw) -> Knobs:
+    base = dict(server_capacity=256, client_capacity=128,
+                max_object_points_server=512, max_object_points_client=128,
+                max_detections_per_frame=16, min_obs_before_sync=1)
+    base.update(kw)
+    return Knobs(**base)
+
+
+def build_map(*, mode="semanticxr", n_objects=40, frames=60, interval=5,
+              h=240, w=320, knobs=None, seed=0, embedder=None):
+    scene = make_scene(n_objects=n_objects, seed=seed)
+    classes = {o.oid: o.class_id for o in scene.objects}
+    emb = embedder or OracleEmbedder(embed_dim=EDIM)
+    srv = MappingServer(knobs=knobs or default_knobs(), embedder=emb,
+                        mode=mode)
+    key = jax.random.key(seed)
+    times = []
+    for i, fr in enumerate(scene_stream(scene, n_frames=frames,
+                                        keyframe_interval=interval, h=h, w=w)):
+        times.append(srv.process_frame(fr, classes,
+                                       jax.random.fold_in(key, i)))
+    return srv, emb, scene, times
+
+
+def _voxel_set(pts: np.ndarray, voxel: float = 0.1) -> set:
+    return set(map(tuple, np.floor(pts / voxel).astype(np.int64)))
+
+
+def semantic_quality(srv, emb, scene) -> dict:
+    """mAcc (mean class recall of top-1) + frequency-weighted point IoU.
+    GT clouds are subsampled to the retrieved cloud's size so the IoU scores
+    localization quality, not point density (paper Sec. 4.5.2 analog)."""
+    act = np.asarray(srv.store.active)
+    labels = np.asarray(srv.store.label)
+    gt_by_class: dict[int, list] = {}
+    for o in scene.objects:
+        gt_by_class.setdefault(o.class_id, []).append(o)
+
+    per_class_acc, weights, ious = [], [], []
+    for cid, objs in gt_by_class.items():
+        res = query_server(srv.store, emb.embed_text(cid))
+        slot = int(np.asarray(res.slots[0]))
+        ok = act[slot] and labels[slot] == cid
+        per_class_acc.append(float(ok))
+        weights.append(len(objs))
+        if not ok:
+            ious.append(0.0)
+            continue
+        n = int(np.asarray(srv.store.n_points[slot]))
+        got = np.asarray(srv.store.points[slot])[:n]
+        vox_got = _voxel_set(got)
+        best = 0.0
+        for o in objs:
+            stride = max(1, len(o.points) // max(n, 1))
+            vox_gt = _voxel_set(o.points[::stride])
+            inter = len(vox_got & vox_gt)
+            union = len(vox_got | vox_gt)
+            if union:
+                best = max(best, inter / union)
+        ious.append(best)
+    w = np.asarray(weights, np.float64)
+    return {
+        "mAcc": 100.0 * float(np.mean(per_class_acc)),
+        "F-mIoU": 100.0 * float(np.sum(np.asarray(ious) * w) / w.sum()),
+        "n_mapped": int(act.sum()),
+        "n_gt": len(scene.objects),
+    }
+
+
+def csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,47 @@
+"""Paper Fig. 6: per-update downstream transfer size vs update index —
+object-level incremental updates vs full-scene baseline."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from benchmarks.common import csv_row, default_knobs, EDIM
+from repro.core import MappingServer
+from repro.core.updates import collect_updates, init_sync
+from repro.data.scenes import make_scene, scene_stream
+from repro.perception.embedder import OracleEmbedder
+
+
+def run(full: bool = False):
+    n_objects, frames = (60, 120) if full else (30, 60)
+    scene = make_scene(n_objects=n_objects, seed=1)
+    classes = {o.oid: o.class_id for o in scene.objects}
+    emb = OracleEmbedder(embed_dim=EDIM)
+    kn = default_knobs()
+    srv = MappingServer(knobs=kn, embedder=emb, mode="semanticxr")
+    sync_inc = init_sync(kn.server_capacity)
+
+    key = jax.random.key(1)
+    inc_bytes, full_bytes = [], []
+    for i, fr in enumerate(scene_stream(scene, n_frames=frames,
+                                        keyframe_interval=5, h=60, w=80)):
+        srv.process_frame(fr, classes, jax.random.fold_in(key, i))
+        if i % kn.local_map_update_frequency == 0:
+            pkt, sync_inc = collect_updates(srv.store, sync_inc, kn, tick=i)
+            fpkt, _ = collect_updates(srv.store, init_sync(kn.server_capacity),
+                                      kn, tick=i, full_map=True)
+            inc_bytes.append(pkt.nbytes)
+            full_bytes.append(fpkt.nbytes)
+
+    for j, (a, b) in enumerate(zip(inc_bytes, full_bytes)):
+        csv_row(f"fig6_downstream[update{j}]", a, f"incremental={a}B;full={b}B")
+    tail = max(1, len(inc_bytes) // 3)
+    csv_row("fig6_downstream_tail_ratio",
+            float(np.mean(inc_bytes[-tail:])),
+            f"full_tail={np.mean(full_bytes[-tail:]):.0f}B;"
+            f"ratio={np.mean(full_bytes[-tail:]) / max(np.mean(inc_bytes[-tail:]), 1):.1f}x")
+    return {"incremental": inc_bytes, "full": full_bytes}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Paper Fig. 5: device memory footprint and local query latency vs number
+of objects in the local map (synthetic maps, 80 .. 50k objects).
+
+Query latency decomposes into text embedding (map-size independent; the
+paper measures MobileCLIP on Jetson ~45 ms — we report the similarity +
+top-k part measured here plus that constant, labeled) and per-object
+similarity compute (grows with N).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.core.knobs import Knobs
+from repro.core.local_map import init_local_map, local_map_nbytes
+from repro.core.query import query_local
+
+EDIM = 512
+TEXT_EMBED_MS = 45.0      # paper-reported MobileCLIP text encode on device
+SIZES = [80, 1_000, 5_000, 10_000, 25_000, 50_000]
+
+
+def _filled_map(n: int, knobs: Knobs):
+    m = init_local_map(knobs, EDIM)
+    key = jax.random.key(0)
+    e = jax.random.normal(key, (n, EDIM), jnp.float32)
+    e = e / jnp.linalg.norm(e, axis=1, keepdims=True)
+    return m._replace(
+        ids=jnp.arange(1, n + 1, dtype=jnp.int32),
+        active=jnp.ones((n,), bool),
+        embed=e,
+        label=jnp.arange(n, dtype=jnp.int32) % 20,
+        n_points=jnp.full((n,), knobs.max_object_points_client, jnp.int32),
+    )
+
+
+def run(full: bool = False, use_pallas: bool = False):
+    sizes = SIZES if full else SIZES[:4]
+    out = {}
+    for n in sizes:
+        kn = Knobs(client_capacity=n, max_object_points_client=200)
+        m = _filled_map(n, kn)
+        mem_mb = local_map_nbytes(m) / 2**20
+        q = jax.random.normal(jax.random.key(1), (EDIM,))
+        fn = jax.jit(lambda mm, qq: query_local(mm, qq,
+                                                use_pallas=use_pallas))
+        jax.block_until_ready(fn(m, q).scores)      # warm
+        reps = 20
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn(m, q).scores)
+        sim_ms = (time.perf_counter() - t0) / reps * 1e3
+        total_ms = TEXT_EMBED_MS + sim_ms
+        out[n] = {"memory_mb": mem_mb, "sim_ms": sim_ms,
+                  "total_ms": total_ms}
+        csv_row(f"fig5_local_map[{n}]", sim_ms * 1e3,
+                f"memory={mem_mb:.1f}MB;total={total_ms:.1f}ms"
+                f";pallas={int(use_pallas)}")
+    return out
+
+
+if __name__ == "__main__":
+    run(full=True)

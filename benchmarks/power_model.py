@@ -1,0 +1,33 @@
+"""Paper Fig. 7: XR device power under the four execution regimes.
+
+The container cannot read watts; this is the documented PowerModel from
+core/runtime.py, calibrated to the paper's Jetson measurements — reported so
+the regime STRUCTURE (offload ~idle, LQ costs ~1.2 W at 1q/3s, worst-case
+burst bounded) is reproduced and auditable.
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_row
+from repro.core.runtime import PowerModel
+
+
+def run(full: bool = False):
+    pm = PowerModel()
+    regimes = {
+        "on_device_mapping": pm.on_device_mapping_power(),
+        "idle": pm.idle_w,
+        "semanticxr_sq_streaming": pm.average_power(streaming=True),
+        "lq_1_per_3s": pm.average_power(streaming=False, local_qps=1 / 3),
+        "lq_continuous_14.7qps": pm.average_power(streaming=False,
+                                                  local_qps=14.7),
+    }
+    for name, w in regimes.items():
+        csv_row(f"fig7_power[{name}]", w * 1e3, f"{w:.2f}W")
+    over = (regimes["semanticxr_sq_streaming"] / regimes["idle"] - 1) * 100
+    csv_row("fig7_power_overhead_normal", over * 1e3,
+            f"overhead={over:.1f}%;paper=~2%")
+    return regimes
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Paper Fig. 4: SQ vs LQ average query latency under two network
+conditions (20 ms and ~66 ms RTT) and outage."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import build_map, csv_row, default_knobs, EDIM
+from repro.core.runtime import CloudService, DeviceClient, NetworkModel, choose_mode
+
+
+def run(full: bool = False):
+    srv, emb, scene, _ = build_map(n_objects=40 if not full else 80,
+                                   frames=40 if not full else 100)
+    kn = default_knobs()
+    cloud = CloudService(knobs=kn, store_ref=srv)
+    dev = DeviceClient(knobs=kn, embed_dim=EDIM)
+    dev.ingest(cloud.update_tick(network_up=True), user_pos=jnp.zeros(3))
+
+    classes = sorted({o.class_id for o in scene.objects})[:8]
+    # warm up jits
+    cloud.query(emb.embed_text(classes[0]))
+    dev.query(emb.embed_text(classes[0]))
+
+    def time_queries(fn):
+        t0 = time.perf_counter()
+        for cid in classes:
+            fn(emb.embed_text(cid))
+        return (time.perf_counter() - t0) / len(classes) * 1e3
+
+    # text-embedding constants reflect the paper's hardware asymmetry
+    # (Sec. 5.2): the server embeds text far faster than the device.
+    TEXT_EMBED_SERVER_MS = 2.0
+    TEXT_EMBED_DEVICE_MS = 45.0
+
+    sq_compute = time_queries(cloud.query) + TEXT_EMBED_SERVER_MS
+    lq_ms = time_queries(dev.query) + TEXT_EMBED_DEVICE_MS
+    out = {}
+    for name, net in [("20ms", NetworkModel(rtt_ms=20.0)),
+                      ("66ms", NetworkModel(rtt_ms=66.0)),
+                      ("outage", NetworkModel(outages=((0.0, 1e9),)))]:
+        mode = choose_mode(net, 0.0, kn)
+        if mode == "SQ":
+            total = sq_compute + net.transfer_ms(2 * EDIM) \
+                + net.transfer_ms(6 * kn.max_object_points_client)
+            total -= net.rtt_ms  # one RTT covers both legs
+        else:
+            total = lq_ms
+        out[name] = {"mode": mode, "ms": total}
+        csv_row(f"fig4_query_latency[{name}]", total * 1e3,
+                f"mode={mode};sq_compute={sq_compute:.2f}ms;lq={lq_ms:.2f}ms")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""§Roofline: aggregate the dry-run JSONs into the per-(arch x shape) table.
+
+Reads experiments/dryrun/pod1/*.json (single-pod, per the assignment) and
+emits one CSV row per cell with the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and bytes/device."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import csv_row
+
+DRYRUN = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def run(full: bool = False, pod: str = "pod1"):
+    rows = []
+    d = DRYRUN / pod
+    if not d.exists():
+        csv_row("roofline", 0.0, "dry-run not yet executed")
+        return []
+    for p in sorted(d.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("skipped"):
+            csv_row(f"roofline[{rec['arch']}x{rec['shape']}]", 0.0, "SKIP")
+            continue
+        rl = rec["roofline"]
+        mem = rec["memory"]["peak_bytes_per_dev"] / 2**30
+        rows.append(rec)
+        opt = "|opt" if (rec.get("prune_tiles") or rec.get("mla_absorb")
+                         or rec.get("grad_accum", 1) > 1
+                         or rec.get("int8_kv") or rec.get("seq_parallel")) \
+            else ""
+        csv_row(
+            f"roofline[{rec['arch']}x{rec['shape']}{opt}]",
+            rl["bound_s"] * 1e6,
+            f"dominant={rl['dominant']};compute={rl['compute_s']*1e3:.2f}ms;"
+            f"memory={rl['memory_s']*1e3:.2f}ms;"
+            f"collective={rl['collective_s']*1e3:.2f}ms;"
+            f"mfu={rl['roofline_mfu']:.3f};"
+            f"useful={rl['useful_ratio']:.2f};peak={mem:.1f}GiB/dev")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

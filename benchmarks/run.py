@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (see each module's docstring
+for the paper artifact it reproduces)."""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import (downstream_bw, local_map_scale, mapping_latency,
+                        power_model, query_latency, roofline, upstream_bw)
+
+SUITES = {
+    "tab4_fig3_mapping": mapping_latency.run,
+    "fig4_query": query_latency.run,
+    "fig5_local_map": local_map_scale.run,
+    "fig6_downstream": downstream_bw.run,
+    "tab5_upstream": upstream_bw.run,
+    "fig7_power": power_model.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="run one suite")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale scenes (slower)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in SUITES.items():
+        if args.only and args.only != name:
+            continue
+        print(f"# --- {name} ---")
+        fn(full=args.full)
+
+
+if __name__ == '__main__':
+    main()

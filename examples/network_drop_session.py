@@ -1,0 +1,81 @@
+"""End-to-end device-cloud session with a network outage (paper Fig. 1
+scenario): the device streams RGB-D, the cloud maps; queries ride
+SemanticXR-SQ while the network is up, fail over to SemanticXR-LQ on the
+object-level sparse local map during the outage, and the buffered updates
+flush on reconnect.  Byte and power accounting printed per phase.
+
+    PYTHONPATH=src python examples/network_drop_session.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Knobs, MappingServer
+from repro.core.runtime import (CloudService, DeviceClient, NetworkModel,
+                                PowerModel, choose_mode)
+from repro.data.scenes import CLASS_NAMES, make_scene, scene_stream
+from repro.perception.embedder import OracleEmbedder
+
+
+def main():
+    scene = make_scene(n_objects=25, seed=2)
+    classes = {o.oid: o.class_id for o in scene.objects}
+    emb = OracleEmbedder(embed_dim=256)
+    kn = Knobs(server_capacity=256, client_capacity=64,
+               max_object_points_server=512, max_object_points_client=128,
+               max_detections_per_frame=16, min_obs_before_sync=1)
+    srv = MappingServer(knobs=kn, embedder=emb)
+    cloud = CloudService(knobs=kn, store_ref=srv)
+    dev = DeviceClient(knobs=kn, embed_dim=256)
+    net = NetworkModel(rtt_ms=20.0, outages=((4.0, 8.0),))
+    pm = PowerModel()
+
+    key = jax.random.key(0)
+    down_bytes = 0
+    t = 0.0
+    print(f"{'t':>5} {'net':>6} {'mode':>4} {'mapped':>6} {'local':>5} "
+          f"{'downB':>7}  query")
+    for i, fr in enumerate(scene_stream(scene, n_frames=60,
+                                        keyframe_interval=5, h=240, w=320)):
+        t = i * 1.0
+        up = net.is_up(t)
+        srv.process_frame(fr, classes, jax.random.fold_in(key, i))
+        pkt = cloud.update_tick(network_up=up)
+        if pkt is not None:
+            dev.ingest(pkt, user_pos=jnp.zeros(3))
+            down_bytes += pkt.nbytes
+        elif up and cloud.buffered:
+            pkt = cloud.flush_buffer()
+            dev.ingest(pkt, user_pos=jnp.zeros(3))
+            down_bytes += pkt.nbytes
+            print(f"{t:5.1f} reconnect: flushed buffered updates "
+                  f"({pkt.nbytes} B)")
+
+        mode = choose_mode(net, t, kn)
+        mapped = set(np.asarray(srv.store.label)[np.asarray(srv.store.active)])
+        qtext = ""
+        if i % 2 == 0 and mapped:
+            cid = sorted(mapped)[i // 2 % len(mapped)]
+            res = (cloud.query if mode == "SQ" else dev.query)(
+                emb.embed_text(int(cid)))
+            lat = net.transfer_ms(2 * 256) if mode == "SQ" else 0.12
+            qtext = (f"'{CLASS_NAMES[cid]}' -> #{int(res.oids[0])} "
+                     f"({mode}, ~{lat:.0f} ms)")
+        print(f"{t:5.1f} {'UP' if up else 'DOWN':>6} {mode:>4} "
+              f"{int(np.asarray(srv.store.active.sum())):>6} "
+              f"{int(np.asarray(dev.local.active.sum())):>5} "
+              f"{down_bytes:>7}  {qtext}")
+
+    p = pm.average_power(streaming=True, server_qps=1 / 3)
+    print(f"\ndevice power (streaming + SQ @1q/3s): {p:.2f} W "
+          f"({(p / pm.idle_w - 1) * 100:.1f}% over idle)")
+    print(f"device local-map memory: {dev.memory_bytes() / 2**20:.1f} MiB")
+
+
+if __name__ == "__main__":
+    main()

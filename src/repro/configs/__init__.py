@@ -1,0 +1,14 @@
+"""Assigned architecture configs. Importing this package registers them."""
+from repro.configs.base import (SHAPES, ShapeCell, cell_is_runnable,
+                                get_config, input_specs, list_configs,
+                                make_inputs, smoke_config, SMOKE_CELL)
+from repro.configs import (jamba_v01_52b, minitron_4b, gemma2_27b, yi_9b,
+                           h2o_danube3_4b, deepseek_v3_671b, deepseek_v2_236b,
+                           whisper_small, phi3_vision_4b, rwkv6_3b,
+                           semanticxr)
+
+ASSIGNED = [
+    "jamba-v0.1-52b", "minitron-4b", "gemma2-27b", "yi-9b",
+    "h2o-danube-3-4b", "deepseek-v3-671b", "deepseek-v2-236b",
+    "whisper-small", "phi-3-vision-4.2b", "rwkv6-3b",
+]

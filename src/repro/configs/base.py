@@ -1,0 +1,160 @@
+"""Config registry, the assigned shape cells, input specs, and smoke shrink."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+_REGISTRY: dict[str, Callable[[], cm.ArchConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str) -> cm.ArchConfig:
+    import repro.configs  # noqa: F401  (triggers per-arch module imports)
+    if name.endswith("-smoke"):
+        return smoke_config(get_config(name[:-len("-smoke")]))
+    return _REGISTRY[name]()
+
+
+def list_configs() -> list[str]:
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Assigned shape cells
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+# archs whose attention is quadratic-full everywhere -> skip long_500k
+FULL_ATTENTION_ONLY = {
+    "minitron-4b", "yi-9b", "deepseek-v3-671b", "deepseek-v2-236b",
+    "phi-3-vision-4.2b", "whisper-small",
+}
+
+
+def cell_is_runnable(arch: str, shape: str) -> bool:
+    if shape == "long_500k" and arch in FULL_ATTENTION_ONLY:
+        return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: cm.ArchConfig, cell: ShapeCell) -> dict:
+    """Model inputs for one shape cell, as ShapeDtypeStructs."""
+    B, S = cell.global_batch, cell.seq_len
+    if cfg.encdec:
+        if cell.kind == "train":
+            return {"frames": cm.spec((B, S, cfg.d_model), jnp.float32),
+                    "tokens": cm.spec((B, 448), jnp.int32)}
+        if cell.kind == "prefill":
+            return {"frames": cm.spec((B, S, cfg.d_model), jnp.float32)}
+        return {"tokens": cm.spec((B, 1), jnp.int32)}
+
+    if cfg.frontend == "vision":
+        n_vis = min(cfg.n_frontend_tokens, S // 2)
+        if cell.kind == "train":
+            return {"tokens": cm.spec((B, S - n_vis), jnp.int32),
+                    "extra_embeds": cm.spec((B, n_vis, cfg.d_model),
+                                            jnp.float32)}
+        if cell.kind == "prefill":
+            return {"tokens": cm.spec((B, S - n_vis), jnp.int32),
+                    "extra_embeds": cm.spec((B, n_vis, cfg.d_model),
+                                            jnp.float32)}
+        return {"tokens": cm.spec((B, 1), jnp.int32)}
+
+    if cell.kind in ("train", "prefill"):
+        return {"tokens": cm.spec((B, S), jnp.int32)}
+    return {"tokens": cm.spec((B, 1), jnp.int32)}
+
+
+def make_inputs(cfg: cm.ArchConfig, cell: ShapeCell, key: jax.Array) -> dict:
+    """Concrete random inputs matching input_specs (smoke tests, examples)."""
+    specs = input_specs(cfg, cell)
+    out = {}
+    for k, sp in specs.items():
+        key, sub = jax.random.split(key)
+        if sp.dtype == jnp.int32:
+            out[k] = jax.random.randint(sub, sp.shape, 0, cfg.vocab_size,
+                                        jnp.int32)
+        else:
+            out[k] = jax.random.normal(sub, sp.shape, sp.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Smoke shrink: same family, tiny dims, runs a step on CPU
+# ---------------------------------------------------------------------------
+
+def smoke_config(cfg: cm.ArchConfig) -> cm.ArchConfig:
+    period = cfg.period
+    kw: dict = dict(
+        name=cfg.name + "-smoke",
+        n_layers=cfg.n_dense_prefix + period,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        d_head=32,
+        d_ff=256,
+        d_ff_dense_prefix=256 if cfg.n_dense_prefix else 0,
+        vocab_size=512,
+        sliding_window=32,
+        attn_chunk=64,
+        scan_layers=True,
+        remat=False,
+    )
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(cfg.moe, n_experts=4,
+                                        top_k=min(cfg.moe.top_k, 2),
+                                        d_ff_expert=64)
+    if cfg.mla is not None:
+        kw["mla"] = dataclasses.replace(
+            cfg.mla, q_lora_rank=(64 if cfg.mla.q_lora_rank else 0),
+            kv_lora_rank=32, qk_nope_head_dim=32, qk_rope_head_dim=16,
+            v_head_dim=32)
+        kw["d_head"] = 48  # nope + rope
+    if cfg.mamba is not None:
+        kw["mamba"] = dataclasses.replace(cfg.mamba, d_state=8, chunk=16)
+    if cfg.rwkv is not None:
+        kw["rwkv"] = dataclasses.replace(cfg.rwkv, head_dim=32, decay_lora=8,
+                                         mix_lora=8, chunk=16)
+        kw["n_heads"] = 4
+        kw["d_head"] = 32
+    if cfg.encdec:
+        kw["n_layers"] = 2
+        kw["n_enc_layers"] = 2
+        kw["enc_seq"] = 32
+    if cfg.frontend == "vision":
+        kw["n_frontend_tokens"] = 8
+    return cfg.replace(**kw)
+
+
+SMOKE_CELL = ShapeCell("smoke", 64, 2, "train")

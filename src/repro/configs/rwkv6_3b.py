@@ -1,0 +1,21 @@
+"""rwkv6-3b "Finch" [ssm] — attention-free, data-dependent decay.
+[arXiv:2404.05892; hf]  32L d_model=2560 d_ff=8960 vocab=65536."""
+from repro.configs.base import register
+from repro.models import common as cm
+
+
+@register("rwkv6-3b")
+def config() -> cm.ArchConfig:
+    return cm.ArchConfig(
+        name="rwkv6-3b",
+        n_layers=32,
+        d_model=2560,
+        n_heads=40,                      # d_model / head_dim(64)
+        n_kv_heads=40,
+        d_head=64,
+        d_ff=8960,
+        vocab_size=65536,
+        mixers=(cm.MIXER_RWKV6,),
+        rwkv=cm.RWKVConfig(head_dim=64, decay_lora=64, mix_lora=32, chunk=64),
+        tie_embeddings=False,
+    )

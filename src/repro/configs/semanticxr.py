@@ -1,0 +1,26 @@
+"""SemanticXR's own server-side model configs.
+
+The paper composes off-the-shelf perception models (RAM, GroundingDINO,
+MobileSAM, MobileCLIP).  Here the equivalents are built from the repro model
+zoo: a ~110M captioner LM (the end-to-end training example target) and the
+CLIP-like two-tower embedder defined in repro.perception.
+"""
+from repro.configs.base import register
+from repro.models import common as cm
+
+
+@register("semanticxr-captioner-110m")
+def captioner() -> cm.ArchConfig:
+    return cm.ArchConfig(
+        name="semanticxr-captioner-110m",
+        n_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=4,
+        d_head=64,
+        d_ff=2048,
+        vocab_size=32000,
+        rope_theta=10000.0,
+        tie_embeddings=True,
+        remat=False,
+    )

@@ -1,0 +1,9 @@
+"""SemanticXR core: objects as first-class units of communication, execution
+and memory footprint across the device-cloud boundary (the paper's primary
+contribution, implemented as a composable JAX library)."""
+from repro.core.knobs import Knobs, DEFAULT_KNOBS
+from repro.core.store import ObjectStore, init_store, store_from_knobs
+from repro.core.local_map import LocalMap, init_local_map, ObjectUpdate
+from repro.core.pipeline import MappingServer, StageTimes
+from repro.core.runtime import (NetworkModel, PowerModel, DeviceClient,
+                                CloudService, choose_mode)

@@ -1,0 +1,130 @@
+"""Incremental object association + merge (paper Sec. 2.3.1 / 3.1).
+
+New per-frame detections are matched to existing map objects by combined
+spatial proximity (centroid distance, normalized by bbox scale) and semantic
+similarity (embedding cosine).  Matches merge in place (running-mean
+embedding, re-downsampled merged geometry, version bump); misses insert new
+objects; transient observations are pruned by obs_count gating downstream.
+
+TPU adaptation: the per-detection greedy loop of the reference pipelines
+becomes a batched cost matrix [max_detections, capacity] (an MXU matmul for
+the cosine term, the pairwise-distance kernel in kernels/pairwise for the
+spatial term) + a small sequential resolve over <=32 detections.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import geometry as geo
+from repro.core.store import ObjectStore
+
+
+class Detections(NamedTuple):
+    """Fixed-capacity batch of per-frame object observations."""
+    embed: jax.Array      # [D, E] f32 unit-norm
+    label: jax.Array      # [D] int32
+    points: jax.Array     # [D, P, 3]
+    n_points: jax.Array   # [D] int32
+    valid: jax.Array      # [D] bool
+
+
+def association_scores(store: ObjectStore, det: Detections, *,
+                       spatial_sigma: float = 0.75):
+    """[D, cap] combined match score in [0,1]; inactive slots = -inf."""
+    cent_d = jax.vmap(lambda p, n: geo.centroid_bbox(p, n)[0])(
+        det.points, det.n_points)                          # [D,3]
+    dist2 = jnp.sum(
+        jnp.square(cent_d[:, None, :] - store.centroid[None, :, :]), axis=-1)
+    spatial = jnp.exp(-dist2 / (2 * spatial_sigma ** 2))   # [D,cap]
+    semantic = det.embed @ store.embed.T                   # cosine, unit norm
+    score = 0.5 * spatial + 0.5 * semantic
+    score = jnp.where(store.active[None, :], score, -jnp.inf)
+    score = jnp.where(det.valid[:, None], score, -jnp.inf)
+    return score, cent_d
+
+
+def associate(store: ObjectStore, det: Detections, *, frame: jax.Array,
+              match_threshold: float = 0.6, point_budget: int = 2000,
+              ema: float = 0.25) -> ObjectStore:
+    """Associate one frame's detections into the store. jit-able.
+
+    Scores are computed once as a batched [D, cap] matrix (the object-level
+    parallelism claim: one MXU matmul instead of a per-object loop), then a
+    short sequential resolve merges/inserts — detections within a frame come
+    from instance segmentation and are distinct objects by construction.
+    """
+    score, cent_d = association_scores(store, det)
+    D, cap = score.shape
+    frame = jnp.asarray(frame, jnp.int32)
+    point_budget = min(point_budget, store.points.shape[1])
+
+    def step(st: ObjectStore, i):
+        row = score[i]
+        j = jnp.argmax(row)
+        best = row[j]
+        is_match = (best >= match_threshold) & det.valid[i]
+
+        # --- merge path
+        def merge(st: ObjectStore) -> ObjectStore:
+            new_emb = (1 - ema) * st.embed[j] + ema * det.embed[i]
+            new_emb = new_emb / jnp.maximum(jnp.linalg.norm(new_emb), 1e-9)
+            mpts, mn_ = geo.merge_clouds(st.points[j], st.n_points[j],
+                                         det.points[i], det.n_points[i],
+                                         point_budget)
+            c, mn, mx = geo.centroid_bbox(mpts, mn_)
+            return st._replace(
+                embed=st.embed.at[j].set(new_emb),
+                points=st.points.at[j].set(mpts),
+                n_points=st.n_points.at[j].set(mn_),
+                centroid=st.centroid.at[j].set(c),
+                bbox_min=st.bbox_min.at[j].set(mn),
+                bbox_max=st.bbox_max.at[j].set(mx),
+                obs_count=st.obs_count.at[j].add(1),
+                version=st.version.at[j].add(1),
+                last_seen=st.last_seen.at[j].set(frame),
+            )
+
+        # --- insert path (first free slot)
+        def insert(st: ObjectStore) -> ObjectStore:
+            free = jnp.argmin(st.active)       # first False
+            can = ~st.active[free] & det.valid[i]
+            pts, n = geo.downsample(det.points[i], det.n_points[i],
+                                    point_budget)
+            c, mn, mx = geo.centroid_bbox(pts, n)
+
+            def do(st: ObjectStore) -> ObjectStore:
+                return st._replace(
+                    ids=st.ids.at[free].set(st.next_id),
+                    active=st.active.at[free].set(True),
+                    embed=st.embed.at[free].set(det.embed[i]),
+                    label=st.label.at[free].set(det.label[i]),
+                    points=st.points.at[free].set(pts),
+                    n_points=st.n_points.at[free].set(n),
+                    centroid=st.centroid.at[free].set(c),
+                    bbox_min=st.bbox_min.at[free].set(mn),
+                    bbox_max=st.bbox_max.at[free].set(mx),
+                    obs_count=st.obs_count.at[free].set(1),
+                    version=st.version.at[free].set(1),
+                    last_seen=st.last_seen.at[free].set(frame),
+                    next_id=st.next_id + 1,
+                )
+            return jax.lax.cond(can, do, lambda s: s, st)
+
+        st = jax.lax.cond(is_match, merge, insert, st)
+        return st, None
+
+    store, _ = jax.lax.scan(step, store, jnp.arange(D))
+    return store
+
+
+def prune_transients(store: ObjectStore, *, frame: jax.Array,
+                     min_obs: int = 2, max_age: int = 30) -> ObjectStore:
+    """Deactivate objects never confirmed by repeat observation (Sec. 2.3.1):
+    an object seen fewer than ``min_obs`` times and not re-observed within
+    ``max_age`` frames is dropped as a transient detection."""
+    frame = jnp.asarray(frame, jnp.int32)
+    stale = (frame - store.last_seen > max_age) & (store.obs_count < min_obs)
+    return store._replace(active=store.active & ~stale)

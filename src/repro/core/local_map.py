@@ -1,0 +1,111 @@
+"""Object-level sparse local map (device side, paper Sec. 3.2).
+
+Fixed-capacity per-object entries: embedding for query matching + a point
+cloud further downsampled to the client budget.  Per-object memory is fixed,
+so total device memory grows with retained objects, never with scene size.
+When the map is full, admitting a higher-priority update evicts the
+lowest-priority retained object (object-level update prioritization).
+
+Priority = semantic relevance to app-declared interests
+         + proximity to the user
+         + app-declared class boosts.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.knobs import Knobs
+
+
+class LocalMap(NamedTuple):
+    ids: jax.Array        # [cap] int32 (0 = empty)
+    active: jax.Array     # [cap] bool
+    embed: jax.Array      # [cap, E] f32
+    label: jax.Array      # [cap] int32
+    points: jax.Array     # [cap, Pc, 3] f16 — client point budget
+    n_points: jax.Array   # [cap] int32
+    centroid: jax.Array   # [cap, 3] f32
+    version: jax.Array    # [cap] int32 — last synced server version
+    priority: jax.Array   # [cap] f32
+
+
+def init_local_map(knobs: Knobs, embed_dim: int) -> LocalMap:
+    cap, Pc = knobs.client_capacity, knobs.max_object_points_client
+    return LocalMap(
+        ids=jnp.zeros((cap,), jnp.int32),
+        active=jnp.zeros((cap,), bool),
+        embed=jnp.zeros((cap, embed_dim), jnp.float32),
+        label=jnp.zeros((cap,), jnp.int32),
+        points=jnp.zeros((cap, Pc, 3), jnp.float16),
+        n_points=jnp.zeros((cap,), jnp.int32),
+        centroid=jnp.zeros((cap, 3), jnp.float32),
+        version=jnp.zeros((cap,), jnp.int32),
+        priority=jnp.zeros((cap,), jnp.float32),
+    )
+
+
+def local_map_nbytes(m: LocalMap) -> int:
+    return int(sum(x.size * x.dtype.itemsize for x in m))
+
+
+def compute_priority(embed, label, centroid, *, user_pos, knobs: Knobs,
+                     interest_embeds=None):
+    """Priority score for update admission / eviction (Sec. 3.2)."""
+    prox = 1.0 / (1.0 + jnp.linalg.norm(centroid - user_pos, axis=-1))
+    score = knobs.proximity_weight * prox
+    if interest_embeds is not None and interest_embeds.shape[0] > 0:
+        sem = jnp.max(embed @ interest_embeds.T, axis=-1)
+        score = score + knobs.semantic_weight * jnp.maximum(sem, 0.0)
+    if knobs.priority_classes:
+        boost = jnp.isin(label, jnp.asarray(knobs.priority_classes,
+                                            jnp.int32))
+        score = score + knobs.priority_class_boost * boost
+    return score
+
+
+class ObjectUpdate(NamedTuple):
+    """One object's delta, as shipped over the downlink (see updates.py)."""
+    oid: jax.Array        # [] int32
+    embed: jax.Array      # [E] f32
+    label: jax.Array      # [] int32
+    points: jax.Array     # [Pc, 3] f16
+    n_points: jax.Array   # [] int32
+    centroid: jax.Array   # [3] f32
+    version: jax.Array    # [] int32
+
+
+def apply_update(m: LocalMap, u: ObjectUpdate, priority: jax.Array) -> LocalMap:
+    """Admit one object update; evict lowest-priority entry if full and the
+    newcomer outranks it. jit-able."""
+    # existing entry?
+    hit = (m.ids == u.oid) & m.active
+    has = hit.any()
+    slot_existing = jnp.argmax(hit)
+    # else: first free slot, or eviction candidate
+    free = ~m.active
+    has_free = free.any()
+    slot_free = jnp.argmax(free)
+    evict_pri = jnp.where(m.active, m.priority, jnp.inf)
+    slot_evict = jnp.argmin(evict_pri)
+    can_evict = priority > evict_pri[slot_evict]
+    slot = jnp.where(has, slot_existing,
+                     jnp.where(has_free, slot_free, slot_evict))
+    admit = has | has_free | can_evict
+
+    def write(m: LocalMap) -> LocalMap:
+        return LocalMap(
+            ids=m.ids.at[slot].set(u.oid),
+            active=m.active.at[slot].set(True),
+            embed=m.embed.at[slot].set(u.embed),
+            label=m.label.at[slot].set(u.label),
+            points=m.points.at[slot].set(u.points.astype(m.points.dtype)),
+            n_points=m.n_points.at[slot].set(u.n_points),
+            centroid=m.centroid.at[slot].set(u.centroid),
+            version=m.version.at[slot].set(u.version),
+            priority=m.priority.at[slot].set(priority),
+        )
+
+    return jax.lax.cond(admit, write, lambda x: x, m)

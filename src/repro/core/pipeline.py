@@ -1,0 +1,184 @@
+"""Server-side per-frame semantic mapping pipeline (paper Fig. 2 + Sec. 3.1).
+
+Three execution modes, matching the paper's Fig. 3 ablation bars:
+  B        device-cloud baseline: frame-level sequential execution — each
+           detected object runs the (compiled) per-object stages one after
+           another, geometry uncapped into association.
+  B+P      + object-level parallelism: the frame's detections are padded to
+           a fixed object batch and every stage runs batched (one MXU
+           dispatch instead of D sequential ones).
+  B+P+SD   + object-level geometry downsampling: per-object clouds capped at
+           max_object_points_server before association (= SemanticXR).
+
+Perception models (detector stand-in = GT instance masks from the renderer;
+embedder = perception/embedder.py) are identical across modes — observed
+differences are system organization only (paper Sec. 4.2).  All stage
+functions are jitted with shape-stable (padded) signatures so steady-state
+latency is measured, not retracing.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import association as assoc
+from repro.core import depth as depth_mod
+from repro.core import geometry as geo
+from repro.core.knobs import Knobs
+from repro.core.store import ObjectStore, store_from_knobs
+from repro.data.scenes import Frame
+from repro.perception.embedder import OracleEmbedder
+
+LIFT_BUFFER = 4096   # uncapped per-object buffer (baseline mode)
+
+
+@dataclass
+class StageTimes:
+    detect_ms: float = 0.0
+    embed_ms: float = 0.0
+    lift_ms: float = 0.0
+    associate_ms: float = 0.0
+
+    @property
+    def total_ms(self):
+        return (self.detect_ms + self.embed_ms + self.lift_ms +
+                self.associate_ms)
+
+
+@dataclass
+class MappingServer:
+    knobs: Knobs
+    embedder: OracleEmbedder
+    mode: str = "semanticxr"        # "baseline" | "parallel" | "semanticxr"
+    store: ObjectStore = None
+    frame_count: int = 0
+    deferred: int = 0
+
+    def __post_init__(self):
+        kn = self.knobs
+        if self.store is None:
+            self.store = store_from_knobs(kn, self.embedder.embed_dim)
+
+        lift = partial(geo.lift_depth, stride=kn.depth_downsampling_ratio,
+                       max_points=LIFT_BUFFER)
+        # batched stages (P / SD modes): [D, ...] padded object batch
+        self._lift_batch = jax.jit(jax.vmap(lift, in_axes=(None, 0, None,
+                                                           None)))
+        self._embed_batch = jax.jit(self.embedder.embed_observation)
+        self._down_batch = jax.jit(jax.vmap(
+            lambda p, n: geo.downsample(p, n, kn.max_object_points_server)))
+        # sequential stages (baseline): one object at a time
+        self._lift_one = jax.jit(lift)
+        self._embed_one = jax.jit(
+            lambda c, k: self.embedder.embed_observation(c[None], k)[0])
+
+        self._associate = jax.jit(lambda st, det, fr: assoc.associate(
+            st, det, frame=fr, point_budget=kn.max_object_points_server))
+        self._prune = jax.jit(lambda st, fr: assoc.prune_transients(
+            st, frame=fr, min_obs=kn.min_obs_before_sync))
+
+    # ------------------------------------------------------------------
+    def _detect(self, frame: Frame, classes: dict):
+        """Detector stand-in: GT instance masks + mapping-policy filters."""
+        kn = self.knobs
+        r = kn.depth_downsampling_ratio
+        dets = []
+        for oid in frame.visible_ids:
+            cid = classes[int(oid)]
+            if cid in kn.skip_mapping_set:
+                continue
+            mask_full = frame.inst == oid
+            ys, xs = np.nonzero(mask_full)
+            area = (ys.max() - ys.min() + 1) * (xs.max() - xs.min() + 1)
+            # depth co-design gate: defer small objects (Sec. 3.3).  Area is
+            # scaled to full-sensor units so the knob default applies at any
+            # simulated render resolution.
+            full_scale = (720 * 1280) / mask_full.size
+            if r > 1 and area * full_scale < kn.min_mapping_bbox_area:
+                self.deferred += 1
+                continue
+            dets.append((int(oid), cid, mask_full))
+        return dets[: kn.max_detections_per_frame]
+
+    # ------------------------------------------------------------------
+    def process_frame(self, frame: Frame, classes: dict,
+                      key: jax.Array) -> StageTimes:
+        """Map one keyframe; returns per-stage wall times (Fig. 3)."""
+        kn = self.knobs
+        r = kn.depth_downsampling_ratio
+        D = kn.max_detections_per_frame
+        times = StageTimes()
+
+        t0 = time.perf_counter()
+        dets = self._detect(frame, classes)
+        times.detect_ms = (time.perf_counter() - t0) * 1e3
+        if not dets:
+            self.frame_count += 1
+            return times
+        nd = len(dets)
+
+        depth_lo = jnp.asarray(depth_mod.downsample_depth(frame.depth, r))
+        intr = jnp.asarray(frame.intrinsics)
+        pose = jnp.asarray(frame.pose, jnp.float32)
+        masks_lo = np.stack([depth_mod.downsample_mask(m, r)
+                             for _, _, m in dets])
+        cids_np = np.array([c for _, c, _ in dets], np.int32)
+
+        # --- embedding (object-level parallelism: batch vs sequential)
+        t0 = time.perf_counter()
+        if self.mode == "baseline":
+            embs = jnp.stack([self._embed_one(jnp.asarray(cids_np[i]),
+                                              jax.random.fold_in(key, i))
+                              for i in range(nd)])
+        else:
+            pad_c = jnp.asarray(np.pad(cids_np, (0, D - nd)))
+            embs = self._embed_batch(pad_c, key)
+        embs.block_until_ready()
+        times.embed_ms = (time.perf_counter() - t0) * 1e3
+
+        # --- lift to 3D
+        t0 = time.perf_counter()
+        if self.mode == "baseline":
+            lifted = [self._lift_one(depth_lo, jnp.asarray(masks_lo[i]),
+                                     intr, pose) for i in range(nd)]
+            pts = jnp.stack([l[0] for l in lifted])
+            ns = jnp.stack([l[1] for l in lifted])
+        else:
+            pad_m = np.zeros((D,) + masks_lo.shape[1:], bool)
+            pad_m[:nd] = masks_lo
+            pts, ns, _ = self._lift_batch(depth_lo, jnp.asarray(pad_m), intr,
+                                          pose)
+        # geometry downsampling (SD): cap before association
+        if self.mode == "semanticxr":
+            pts, ns = self._down_batch(pts, ns)
+        pts.block_until_ready()
+        times.lift_ms = (time.perf_counter() - t0) * 1e3
+
+        # --- association + merge (store buffers hold the cap; baseline and
+        # P modes carry the uncapped buffer into the merge path)
+        t0 = time.perf_counter()
+        if self.mode == "baseline":
+            pad = D - nd
+            pts = jnp.pad(pts, ((0, pad), (0, 0), (0, 0)))
+            ns = jnp.pad(ns, (0, pad))
+            embs = jnp.pad(embs, ((0, pad), (0, 0)))
+        det = assoc.Detections(
+            embed=embs,
+            label=jnp.asarray(np.pad(cids_np, (0, D - nd))),
+            points=pts,
+            n_points=ns,
+            valid=jnp.arange(D) < nd,
+        )
+        self.store = self._associate(self.store, det,
+                                     jnp.asarray(self.frame_count))
+        self.store = self._prune(self.store, jnp.asarray(self.frame_count))
+        jax.block_until_ready(self.store.active)
+        times.associate_ms = (time.perf_counter() - t0) * 1e3
+
+        self.frame_count += 1
+        return times

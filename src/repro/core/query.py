@@ -1,0 +1,54 @@
+"""Query engines: SemanticXR-SQ (server map) and SemanticXR-LQ (local map).
+
+A query = text -> embedding -> cosine top-k over per-object descriptors ->
+object ids + geometry (Sec. 2.3.2).  Both engines share the same fused
+similarity+top-k path; when cfg.use_pallas the inner product + running top-k
+runs in the Pallas kernel (kernels/query_topk.py) — one HBM pass over the
+object embeddings regardless of map size.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.local_map import LocalMap
+from repro.core.store import ObjectStore
+
+
+class QueryResult(NamedTuple):
+    oids: jax.Array       # [k] int32 (0 = no match)
+    scores: jax.Array     # [k] f32
+    slots: jax.Array      # [k] int32 store/map row of each hit
+
+
+def _topk_similarity(qe: jax.Array, embeds: jax.Array, active: jax.Array,
+                     ids: jax.Array, k: int, *, use_pallas: bool = False):
+    if use_pallas:
+        from repro.kernels import ops as kops
+        scores, slots = kops.query_topk(qe, embeds, active, k)
+    else:
+        sim = embeds @ qe                               # [cap]
+        sim = jnp.where(active, sim, -jnp.inf)
+        scores, slots = jax.lax.top_k(sim, k)
+    return QueryResult(oids=ids[slots], scores=scores, slots=slots)
+
+
+def query_server(store: ObjectStore, query_embed: jax.Array, *, k: int = 5,
+                 use_pallas: bool = False) -> QueryResult:
+    return _topk_similarity(query_embed, store.embed, store.active,
+                            store.ids, k, use_pallas=use_pallas)
+
+
+def query_local(m: LocalMap, query_embed: jax.Array, *, k: int = 5,
+                use_pallas: bool = False) -> QueryResult:
+    return _topk_similarity(query_embed, m.embed, m.active, m.ids, k,
+                            use_pallas=use_pallas)
+
+
+def batched_query_local(m: LocalMap, query_embeds: jax.Array, *, k: int = 5,
+                        use_pallas: bool = False) -> QueryResult:
+    """[Q, E] query batch -> QueryResult with leading Q dim."""
+    return jax.vmap(lambda q: query_local(m, q, k=k, use_pallas=use_pallas))(
+        query_embeds)

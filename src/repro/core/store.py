@@ -1,0 +1,67 @@
+"""Server-side semantic map: objects as first-class, fixed-capacity SoA state.
+
+A map object = (stable id, semantic embedding, class label, 3D point cloud)
+— the paper's core abstraction (Sec. 3).  The store is a pytree of arrays so
+every operation (association, merge, query) is jit-able and shardable; slot
+count is the capacity knob, `active` masks live slots.
+
+``version`` increments on any semantically meaningful change (new geometry
+angle, embedding update) — the incremental-update protocol (updates.py) ships
+exactly the objects whose version advanced past the client's synced vector.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.knobs import Knobs
+
+
+class ObjectStore(NamedTuple):
+    ids: jax.Array          # [cap] int32, 0 = never assigned
+    active: jax.Array       # [cap] bool
+    embed: jax.Array        # [cap, E] f32, unit norm
+    label: jax.Array        # [cap] int32
+    points: jax.Array       # [cap, P, 3] f32 (masked by n_points)
+    n_points: jax.Array     # [cap] int32
+    centroid: jax.Array     # [cap, 3] f32
+    bbox_min: jax.Array     # [cap, 3] f32
+    bbox_max: jax.Array     # [cap, 3] f32
+    obs_count: jax.Array    # [cap] int32
+    version: jax.Array      # [cap] int32
+    last_seen: jax.Array    # [cap] int32 frame index of last observation
+    next_id: jax.Array      # [] int32
+
+
+def init_store(capacity: int, embed_dim: int, max_points: int) -> ObjectStore:
+    cap, P = capacity, max_points
+    return ObjectStore(
+        ids=jnp.zeros((cap,), jnp.int32),
+        active=jnp.zeros((cap,), bool),
+        embed=jnp.zeros((cap, embed_dim), jnp.float32),
+        label=jnp.zeros((cap,), jnp.int32),
+        points=jnp.zeros((cap, P, 3), jnp.float32),
+        n_points=jnp.zeros((cap,), jnp.int32),
+        centroid=jnp.zeros((cap, 3), jnp.float32),
+        bbox_min=jnp.zeros((cap, 3), jnp.float32),
+        bbox_max=jnp.zeros((cap, 3), jnp.float32),
+        obs_count=jnp.zeros((cap,), jnp.int32),
+        version=jnp.zeros((cap,), jnp.int32),
+        last_seen=jnp.zeros((cap,), jnp.int32),
+        next_id=jnp.ones((), jnp.int32),
+    )
+
+
+def store_from_knobs(knobs: Knobs, embed_dim: int) -> ObjectStore:
+    return init_store(knobs.server_capacity, embed_dim,
+                      knobs.max_object_points_server)
+
+
+def n_active(store: ObjectStore) -> jax.Array:
+    return store.active.sum()
+
+
+def store_nbytes(store: ObjectStore) -> int:
+    return int(sum(x.size * x.dtype.itemsize for x in store))

@@ -1,0 +1,89 @@
+"""Object-level incremental update protocol (paper Sec. 3.2, Fig. 6).
+
+The server tracks the per-client synced version of every object and, on each
+update tick (every ``local_map_update_frequency`` frames), ships exactly the
+objects that are (a) new or modified since the last sync, (b) observed at
+least ``min_obs_before_sync`` times (transient filtering), and (c) admitted
+by the prioritizer.  Downstream bandwidth is therefore proportional to map
+*changes*; the device-cloud baseline ships the full map each tick.
+
+Byte accounting is exact over the wire format below — the downstream-BW
+benchmark (Fig. 6) reads these numbers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import geometry as geo
+from repro.core.knobs import Knobs
+from repro.core.local_map import ObjectUpdate
+from repro.core.store import ObjectStore
+
+# wire format per object: id(4) + label(2) + version(4) + n_points(2)
+# + centroid(3*4) + embedding(E*2, fp16) + points(n*3*2, fp16)
+_HEADER_B = 4 + 2 + 4 + 2 + 12
+
+
+def update_nbytes(embed_dim: int, n_points: int) -> int:
+    return _HEADER_B + 2 * embed_dim + 6 * int(n_points)
+
+
+@dataclass
+class UpdatePacket:
+    updates: list            # list[ObjectUpdate]
+    nbytes: int
+    tick: int
+
+
+class SyncState(NamedTuple):
+    """Server-side per-client sync vector: last shipped version per slot."""
+    synced_version: np.ndarray   # [cap] int32 (host-side bookkeeping)
+
+
+def init_sync(capacity: int) -> SyncState:
+    return SyncState(synced_version=np.zeros((capacity,), np.int32))
+
+
+def collect_updates(store: ObjectStore, sync: SyncState, knobs: Knobs, *,
+                    tick: int, full_map: bool = False,
+                    priorities: np.ndarray | None = None,
+                    max_updates: int | None = None):
+    """Build the update packet for one tick.
+
+    full_map=True reproduces the device-cloud baseline (whole scene each
+    tick).  Returns (packet, new_sync).
+    """
+    active = np.asarray(store.active)
+    version = np.asarray(store.version)
+    obs = np.asarray(store.obs_count)
+    changed = active & (obs >= knobs.min_obs_before_sync)
+    if not full_map:
+        changed &= version > sync.synced_version
+    idx = np.nonzero(changed)[0]
+    if priorities is not None and len(idx):
+        idx = idx[np.argsort(-priorities[idx], kind="stable")]
+    if max_updates is not None:
+        idx = idx[:max_updates]
+
+    Pc = knobs.max_object_points_client
+    updates, nbytes = [], 0
+    ids = np.asarray(store.ids)
+    labels = np.asarray(store.label)
+    for i in idx:
+        pts, n = geo.downsample(store.points[i], store.n_points[i], Pc)
+        c, _, _ = geo.centroid_bbox(pts, n)
+        u = ObjectUpdate(
+            oid=jnp.asarray(ids[i]), embed=store.embed[i],
+            label=jnp.asarray(labels[i]), points=pts.astype(jnp.float16),
+            n_points=n, centroid=c, version=jnp.asarray(version[i]))
+        updates.append(u)
+        nbytes += update_nbytes(store.embed.shape[1], int(n))
+
+    new_synced = sync.synced_version.copy()
+    new_synced[idx] = version[idx]
+    return UpdatePacket(updates=updates, nbytes=nbytes, tick=tick), \
+        SyncState(synced_version=new_synced)

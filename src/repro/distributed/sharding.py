@@ -1,0 +1,293 @@
+"""Per-arch sharding rules: parameters, optimizer state (ZeRO-1), caches,
+inputs.
+
+Axes: "model" = tensor/expert parallel (16-way); "data" (+"pod") = data
+parallel.  Rules are path-name driven over the param pytrees produced by
+models/*.  Divisibility guards: a dim is only sharded when the *semantic*
+unit (heads, kv-heads, experts, d_ff) divides the axis size — otherwise the
+leaf is replicated and the cost shows up in the roofline (e.g. minitron's 24
+heads on a 16-way model axis; see EXPERIMENTS.md §Roofline notes).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import common as cm
+
+DP_AXES = ("pod", "data")   # batch axes (pod present only on multi-pod mesh)
+
+
+def dp_axes(mesh: Mesh):
+    return tuple(a for a in DP_AXES if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _leaf_name(path) -> str:
+    def one(p):
+        for attr in ("key", "name", "idx"):
+            v = getattr(p, attr, None)
+            if v is not None:
+                return str(v)
+        return str(p)
+    return "/".join(one(p) for p in path)
+
+
+def param_rule(name: str, shape: tuple, cfg: cm.ArchConfig, tp: int,
+               dsz: int = 16) -> P:
+    """PartitionSpec for one parameter leaf (shape excludes stacking dims)."""
+    leaf = name.rsplit("/", 1)[-1]
+    nd = len(shape)
+
+    def pad(spec_tail: tuple) -> P:
+        return P(*((None,) * (nd - len(spec_tail)) + spec_tail))
+
+    heads_ok = cfg.n_heads % tp == 0
+    kv_ok = cfg.n_kv_heads % tp == 0
+    ff_ok = cfg.d_ff % tp == 0
+    d_ok = cfg.d_model % tp == 0
+
+    if leaf == "embed":
+        # vocab-sharded; pjit input shardings require exact divisibility
+        return pad(("model", None)) if cfg.vocab_size % tp == 0 \
+            else pad((None, "model")) if cfg.d_model % tp == 0 else pad((None, None))
+    if leaf == "lm_head":
+        return pad((None, "model")) if cfg.vocab_size % tp == 0 \
+            else pad((None, None))
+    if leaf in ("vis_proj",):
+        return pad((None, None))
+
+    # attention
+    if leaf == "wq":
+        return pad((None, "model")) if heads_ok else pad((None, None))
+    rwkv = cfg.mixers[0] == cm.MIXER_RWKV6
+    rwkv_rep = rwkv and cfg.rwkv_tm_shard == "replicated"
+    if leaf in ("wk", "wv"):
+        # rwkv wk/wv live under cmix/mixer too; those are d->d / d->ff
+        if rwkv:
+            if shape[-1] == cfg.d_ff or shape[-2] == cfg.d_ff:
+                return pad((None, "model")) if ff_ok else pad((None, None))
+            # time-mix d->d: heads (40) don't divide the model axis, so TP
+            # here only buys gathers around the per-head wkv recurrence.
+            # Serving replicates the (small) weights (§Perf rwkv6 iteration:
+            # decode 3.04 -> 0.10 ms); training keeps them sharded so grad
+            # all-reduce stays sharded.
+            if rwkv_rep:
+                return pad((None, None))
+            return pad((None, "model")) if d_ok else pad((None, None))
+        return pad((None, "model")) if kv_ok else pad((None, None))
+    if leaf == "wo":
+        if rwkv:
+            return pad((None, None)) if rwkv_rep else (
+                pad(("model", None)) if d_ok else pad((None, None)))
+        return pad(("model", None)) if heads_ok else pad((None, None))
+    if leaf in ("wr", "wg"):                 # rwkv receptance/gate d->d
+        if rwkv_rep and shape[-1] == cfg.d_model:
+            return pad((None, None))
+        return pad((None, "model")) if d_ok else pad((None, None))
+    if leaf in ("q_scale", "k_scale"):
+        return pad((None,))
+
+    # MLA
+    if leaf in ("wq_down", "wkv_down", "q_ln_scale", "kv_ln_scale"):
+        return pad((None,) * nd)
+    if leaf in ("wq_up", "wk_up", "wv_up"):
+        return pad((None, "model")) if heads_ok else pad((None, None))
+
+    # dense MLP
+    if leaf in ("wg", "wu"):
+        return pad((None, "model")) if ff_ok else pad((None, None))
+    if leaf == "wd":
+        return pad(("model", None)) if ff_ok else pad((None, None))
+
+    # MoE
+    if leaf == "router":
+        return pad((None, None))
+    if leaf in ("we_g", "we_u", "we_d"):
+        # Routed experts dominate MoE params (653B of deepseek-v3's 671B);
+        # sharding them over "model" only replicates them across the 16 data
+        # shards (81 GB/dev — fatal).  Preference order:
+        #   1. full EP: experts over ("data","model") when E divides dp*tp
+        #   2. 2D: experts over "model", expert-ff over "data"
+        #   3. model-only (small expert counts)
+        E = cfg.moe.n_experts
+        f = cfg.moe.d_ff_expert
+        if cfg.moe_weight_shard == "ep" and E % (tp * dsz) == 0:
+            return pad((("data", "model"), None, None))
+        # (tested: E-only sharding for small-MoE serving regresses decode
+        # peak 4.8 -> 22 GiB without touching the long_500k collectives —
+        # refuted; 2D stays the serving fallback. EXPERIMENTS §Perf.)
+        fdim = 2 if leaf in ("we_g", "we_u") else 1
+        if E % tp == 0 and f % dsz == 0:
+            names = [None, None, None]
+            names[0] = "model"
+            names[fdim] = "data"
+            return pad(tuple(names))
+        return pad(("model", None, None)) if E % tp == 0 else pad((None,) * nd)
+    if leaf in ("ws_g", "ws_u"):
+        fs = cfg.moe.n_shared * cfg.moe.d_ff_expert
+        return pad((None, "model")) if fs % tp == 0 else pad((None, None))
+    if leaf == "ws_d":
+        fs = cfg.moe.n_shared * cfg.moe.d_ff_expert
+        return pad(("model", None)) if fs % tp == 0 else pad((None, None))
+
+    # mamba (d_inner = expand * d_model, sharded over model)
+    if leaf == "in_proj":
+        return pad((None, "model")) if d_ok else pad((None, None))
+    if leaf in ("conv_w", "x_proj", "out_proj", "A_log"):
+        return pad(("model",) + (None,) * (nd - 1)) if d_ok else pad((None,) * nd)
+    if leaf == "dt_proj":
+        return pad((None, "model")) if d_ok else pad((None, None))
+    if leaf in ("conv_bias", "dt_bias", "D"):
+        return pad(("model",)) if d_ok else pad((None,))
+
+    # rwkv misc — all feed the head-grouped recurrence (see wk/wv note)
+    if leaf in ("decay_w1", "mix_w1", "bonus_u"):
+        return pad((None,) * nd)
+    if leaf == "decay_w2":
+        return pad((None, None)) if rwkv_rep else (
+            pad((None, "model")) if d_ok else pad((None, None)))
+    if leaf == "mix_w2":
+        return pad((None,) * nd) if rwkv_rep else (
+            pad((None, None, "model")) if d_ok else pad((None,) * nd))
+
+    # norms / scalars / token-shift mus
+    return pad((None,) * nd)
+
+
+def _stacked(name: str) -> int:
+    """Number of leading stacking dims (scan-over-periods adds one).
+    Works for raw param paths and for optimizer-state paths (master/body/…)."""
+    parts = name.split("/")[:-1]
+    return 1 if any(p in ("body", "enc_body", "dec_body", "self_kv")
+                    for p in parts) else 0
+
+
+def param_pspecs(cfg: cm.ArchConfig, specs, mesh: Mesh):
+    tp = _axis_size(mesh, "model")
+    dsz = _axis_size(mesh, "data")
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        k = _stacked(name)
+        inner = param_rule(name, leaf.shape[k:], cfg, tp, dsz)
+        return P(*((None,) * k + tuple(inner)))
+
+    return jax.tree_util.tree_map_with_path(rule, specs)
+
+
+def zero_pspecs(cfg: cm.ArchConfig, specs, mesh: Mesh):
+    """Optimizer-state sharding: param sharding + ZeRO-1 over the data axis
+    on the first unsharded, divisible dim."""
+    base = param_pspecs(cfg, specs, mesh)
+    dsize = _axis_size(mesh, "data")
+
+    def add_zero(ps: P, leaf):
+        if leaf.ndim == 0:
+            return P()
+        names = list(tuple(ps)) + [None] * (leaf.ndim - len(tuple(ps)))
+        used = set()
+        for n in names:
+            used.update(n if isinstance(n, tuple) else (n,))
+        if "data" in used:
+            return P(*names)
+        for i, (n, dim) in enumerate(zip(names, leaf.shape)):
+            if n is None and dim % dsize == 0 and dim >= dsize:
+                names[i] = "data"
+                break
+        return P(*names)
+
+    flat_s, treedef = jax.tree_util.tree_flatten_with_path(specs)
+    flat_b = jax.tree.leaves(base, is_leaf=lambda x: isinstance(x, P))
+    out = [add_zero(ps, leaf) for (_, leaf), ps in zip(flat_s, flat_b)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def cache_pspecs(cfg: cm.ArchConfig, cache_specs, mesh: Mesh, *,
+                 global_batch: int):
+    """KV/state cache sharding. Batch over data axes when divisible;
+    otherwise (long-context batch=1) shard the sequence axis over "data"
+    and heads over "model"."""
+    tp = _axis_size(mesh, "model")
+    dp = int(np.prod([_axis_size(mesh, a) for a in dp_axes(mesh)])) or 1
+    batch_ok = global_batch % dp == 0 and global_batch >= dp
+    kv_ok = cfg.n_kv_heads % tp == 0
+    dpa = dp_axes(mesh)
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        k = _stacked(name)
+        shape = leaf.shape[k:]
+        nd = len(shape)
+        leafname = name.rsplit("/", 1)[-1]
+        names: list = [None] * nd
+        if nd == 0:
+            return P(*((None,) * k))
+        if leafname in ("k", "v", "k_scale", "v_scale"):  # KVCache [B,T,Kv,*]
+            if batch_ok:
+                names[0] = dpa
+            elif shape[1] % _axis_size(mesh, "data") == 0 and shape[1] > 1:
+                names[1] = "data"
+            if kv_ok:
+                names[2] = "model"
+            elif names[1] is None and shape[1] % tp == 0 and shape[1] > tp:
+                # kv heads don't divide tp: sequence-parallel cache on the
+                # model axis (flash-decoding-style partial softmax combine)
+                names[1] = "model"
+        elif leafname in ("c_kv", "k_rope"):  # MLA [B,T,r]
+            if batch_ok:
+                names[0] = dpa
+            elif shape[1] % _axis_size(mesh, "data") == 0:
+                names[1] = "data"
+        elif leafname == "conv":              # [B,K-1,d_in]
+            if batch_ok:
+                names[0] = dpa
+            if cfg.d_model % tp == 0:
+                names[2] = "model"
+        elif leafname == "ssm":               # [B,d_in,N]
+            if batch_ok:
+                names[0] = dpa
+            if cfg.d_model % tp == 0:
+                names[1] = "model"
+        elif leafname in ("tm_prev", "cm_prev"):
+            if batch_ok:
+                names[0] = dpa
+        elif leafname == "state":             # rwkv [B,h,dk,dv]
+            if batch_ok:
+                names[0] = dpa
+            if cfg.n_heads % tp == 0:
+                names[1] = "model"
+        elif leafname in ("cross_k", "cross_v"):  # [L,B,S,H,dh]
+            if batch_ok:
+                names[1] = dpa
+            if cfg.n_heads % tp == 0:
+                names[3] = "model"
+            return P(*names)                  # L dim already included
+        return P(*((None,) * k + tuple(names)))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_specs)
+
+
+def input_pspecs(cfg: cm.ArchConfig, specs, mesh: Mesh, *, global_batch: int):
+    dp = int(np.prod([_axis_size(mesh, a) for a in dp_axes(mesh)])) or 1
+    batch_ok = global_batch % dp == 0 and global_batch >= dp
+    dpa = dp_axes(mesh)
+
+    def rule(path, leaf):
+        names = [None] * leaf.ndim
+        if leaf.ndim and batch_ok:
+            names[0] = dpa
+        return P(*names)
+
+    return jax.tree_util.tree_map_with_path(rule, specs)
+
+
+def shardings_of(pspecs, mesh: Mesh):
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,103 @@
+"""Blocked (flash) attention Pallas kernel for the backbone prefill path.
+
+Standard two-level online-softmax tiling reworked for the TPU memory
+hierarchy: q/k/v tiles live in VMEM with MXU-aligned block shapes (q 128+,
+k 128+, dh a lane multiple), the running (m, l, acc) state sits in VMEM
+scratch, and the [Bq, Bk] score tile never leaves the chip — this is the
+kernel the jnp path in models/attention.py models, and what the §Roofline
+memory term assumes when it counts score traffic as on-chip.
+
+Grid: (H, Sq // Bq, Sk // Bk), k innermost.  Causal + sliding-window masks
+are applied via 2D iota against absolute positions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, softcap: float,
+            block_q: int, block_k: int, n_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                      # [Bq, dh]
+    k = k_ref[0]                                      # [Bk, dh]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones_like(s, dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _fin():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int = 0,
+                           softcap: float = 0.0, block_q: int = 128,
+                           block_k: int = 128, interpret: bool = True):
+    """q,k,v: [H, S, dh] -> [H, S, dh].  (vmap over batch outside.)"""
+    H, S, dh = q.shape
+    scale = dh ** -0.5
+    pq = (-S) % block_q
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pq), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pq), (0, 0)))
+    Sp = S + pq
+    n_k = Sp // block_k
+    grid = (H, Sp // block_q, n_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          softcap=softcap, block_q=block_q, block_k=block_k,
+                          n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, Sp, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :S]

@@ -1,0 +1,45 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+On this CPU container kernels execute in interpret mode (the Python kernel
+body runs per grid step); on TPU the same calls compile to Mosaic.  The
+``interpret`` default keys off the backend so the code is deploy-ready.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import pairwise as _pw
+from repro.kernels import query_topk as _qt
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnums=(3,))
+def query_topk(q, embeds, active, k: int):
+    return _qt.query_topk_pallas(q, embeds, active, k,
+                                 interpret=_interpret())
+
+
+@jax.jit
+def nearest_dist(a, b, b_valid):
+    """Pads coords to 8 lanes then runs the blocked kernel."""
+    D = a.shape[1]
+    padd = (-D) % 8
+    if padd:
+        a = jnp.pad(a, ((0, 0), (0, padd)))
+        b = jnp.pad(b, ((0, 0), (0, padd)))
+    return _pw.nearest_dist_pallas(a, b, b_valid, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0):
+    return _fa.flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      softcap=softcap,
+                                      interpret=_interpret())

@@ -1,0 +1,87 @@
+"""Fused query-similarity + running top-k Pallas kernel.
+
+SemanticXR's query hot-spot (Sec. 2.3.2 / Fig. 5): score one text embedding
+against every object embedding and keep the best k — the per-query cost that
+grows with map size.  The jnp path materializes the full [N] similarity
+vector in HBM, then runs a full top-k pass (second HBM sweep).  This kernel
+streams the embedding table through VMEM once: each grid step matmuls an
+[Nb, E] block against the query (MXU), masks inactive slots, and folds the
+block's candidates into a [k]-sized running top-k held in the output refs —
+one HBM pass, no [N] intermediate.
+
+Grid: (N // Nb,), sequential on TPU, so outputs act as cross-step carries.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _kernel(q_ref, e_ref, m_ref, vals_ref, idx_ref, *, k: int, block_n: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, NEG)
+        idx_ref[...] = jnp.full_like(idx_ref, -1)
+
+    # [Nb, E] @ [E, 1] -> [Nb, 1] on the MXU
+    sim = jnp.dot(e_ref[...], q_ref[...],
+                  preferred_element_type=jnp.float32)          # [Nb, 1]
+    sim = jnp.where(m_ref[...] > 0, sim, NEG)[:, 0]            # [Nb]
+    base = step * block_n
+    gidx = base + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+
+    cand_v = jnp.concatenate([vals_ref[0], sim])               # [k + Nb]
+    cand_i = jnp.concatenate([idx_ref[0], gidx])
+
+    # k selection passes over the merged candidates (k is small & static)
+    out_v = []
+    out_i = []
+    for _ in range(k):
+        j = jnp.argmax(cand_v)
+        out_v.append(cand_v[j])
+        out_i.append(cand_i[j])
+        cand_v = jnp.where(
+            jax.lax.broadcasted_iota(jnp.int32, cand_v.shape, 0) == j,
+            NEG, cand_v)
+    vals_ref[0] = jnp.stack(out_v)
+    idx_ref[0] = jnp.stack(out_i)
+
+
+def query_topk_pallas(q: jax.Array, embeds: jax.Array, active: jax.Array,
+                      k: int, *, block_n: int = 1024,
+                      interpret: bool = True):
+    """q: [E]; embeds: [N, E]; active: [N] -> (scores [k], idx [k])."""
+    N, E = embeds.shape
+    pad = (-N) % block_n
+    if pad:
+        embeds = jnp.pad(embeds, ((0, pad), (0, 0)))
+        active = jnp.pad(active, (0, pad))
+    Np = N + pad
+    mask = active.astype(jnp.float32)[:, None]
+    grid = (Np // block_n,)
+    vals, idx = pl.pallas_call(
+        functools.partial(_kernel, k=k, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((E, 1), lambda i: (0, 0)),            # query resident
+            pl.BlockSpec((block_n, E), lambda i: (i, 0)),      # stream blocks
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, k), jnp.float32),
+            jax.ShapeDtypeStruct((1, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q[:, None], embeds, mask)
+    return vals[0], idx[0]

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def query_topk_ref(q: jax.Array, embeds: jax.Array, active: jax.Array,
+                   k: int):
+    """q: [E]; embeds: [N, E]; active: [N] bool -> (scores [k], idx [k])."""
+    sim = embeds @ q
+    sim = jnp.where(active, sim, -jnp.inf)
+    return jax.lax.top_k(sim, k)
+
+
+def nearest_dist_ref(a: jax.Array, b: jax.Array, b_valid: jax.Array):
+    """a: [M, D]; b: [N, D]; b_valid: [N] -> min squared distance per a row.
+    (the association/chamfer spatial primitive)"""
+    d2 = jnp.sum(jnp.square(a[:, None, :] - b[None, :, :]), axis=-1)
+    d2 = jnp.where(b_valid[None, :], d2, jnp.inf)
+    return jnp.min(d2, axis=1)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        softcap: float = 0.0):
+    """q,k,v: [H, S, dh] (single batch slice) -> [H, S, dh]."""
+    H, S, dh = q.shape
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * dh ** -0.5
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,186 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh, record memory analysis, cost analysis, and the collective
+schedule.  Writes one JSON per cell under experiments/dryrun/.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+The first two lines above MUST precede any jax import: jax locks the device
+count at first init, and only the dry-run wants 512 host devices.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ASSIGNED, SHAPES, cell_is_runnable, get_config
+from repro.launch import costs as costs_mod
+from repro.launch import hlo_costs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             absorb_mla: bool = False, prune_tiles: bool = False,
+             seq_parallel: bool = False, grad_accum: int = 1,
+             int8_kv: bool = False, verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    # MoE dispatch groups track the data-parallel world so token groups stay
+    # shard-local.
+    import numpy as np
+    dp = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                      if a != "model"]))
+    if cfg.moe is not None:
+        cfg = cfg.replace(moe_groups=min(dp, cell.global_batch),
+                          moe_weight_shard="2d" if cell.kind == "train"
+                          else "ep")
+    if cfg.rwkv is not None and cell.kind != "train":
+        cfg = cfg.replace(rwkv_tm_shard="replicated")
+    if int8_kv and cell.kind == "decode":
+        cfg = cfg.replace(kv_cache_dtype="int8")
+    if absorb_mla and cfg.mla is not None:
+        cfg = cfg.replace(mla=cfg.mla, name=cfg.name + "+absorb")
+        import dataclasses
+        cfg = cfg.replace(mla=dataclasses.replace(cfg.mla, absorb=True))
+    if prune_tiles:
+        cfg = cfg.replace(prune_tiles=True)
+    if seq_parallel and cell.kind == "train" and cell.seq_len % 16 == 0:
+        dpa = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        cfg = cfg.replace(act_shard=(dpa, "model"))
+    if grad_accum > 1 and cell.kind == "train":
+        cfg = cfg.replace(grad_accum=grad_accum)
+    if cell.kind != "train":
+        cfg = cfg.replace(remat=False)
+
+    rec = {"arch": arch, "shape": shape, "kind": cell.kind,
+           "mesh": dict(mesh.shape), "chips": chips,
+           "multi_pod": multi_pod, "mla_absorb": bool(absorb_mla and cfg.mla),
+           "prune_tiles": prune_tiles, "seq_parallel": seq_parallel,
+           "grad_accum": grad_accum, "int8_kv": int8_kv}
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        step, args = build_step(cfg, mesh, cell)
+        if cell.kind == "decode":
+            lowered = step.lower(*args)
+        else:
+            lowered = step.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes_per_dev": ma.argument_size_in_bytes,
+        "output_bytes_per_dev": ma.output_size_in_bytes,
+        "temp_bytes_per_dev": ma.temp_size_in_bytes,
+        "alias_bytes_per_dev": ma.alias_size_in_bytes,
+        "peak_bytes_per_dev": (ma.argument_size_in_bytes +
+                               ma.output_size_in_bytes +
+                               ma.temp_size_in_bytes -
+                               ma.alias_size_in_bytes),
+    }
+    ca = compiled.cost_analysis() or {}
+    rec["hlo_cost_raw"] = {k: ca[k] for k in ("flops", "bytes accessed")
+                           if k in ca}
+
+    hlo = compiled.as_text()
+    coll = hlo_costs.collective_costs(hlo, chips)
+    rec["collectives"] = {
+        "wire_bytes_per_dev": coll.wire_bytes,
+        "by_kind": dict(coll.by_kind),
+        "n_sites": len(coll.ops),
+    }
+
+    cc = costs_mod.step_costs(cfg, cell)
+    rl = costs_mod.roofline_terms(cc, coll.wire_bytes, chips=chips)
+    rec["analytic"] = {
+        "flops": cc.flops, "hbm_bytes": cc.hbm_bytes,
+        "model_flops": cc.model_flops, "n_params": cc.n_params,
+        "n_active": cc.n_active,
+    }
+    rec["roofline"] = rl
+    rec["timings"] = {"lower_s": t1 - t0, "compile_s": t2 - t1}
+
+    if verbose:
+        mem = rec["memory"]
+        print(f"[{arch} x {shape}] mesh={tuple(mesh.shape.values())} "
+              f"compile={t2 - t1:.1f}s "
+              f"peak/dev={mem['peak_bytes_per_dev']/2**30:.2f}GiB "
+              f"coll/dev={coll.wire_bytes/2**20:.1f}MiB "
+              f"dominant={rl['dominant']} bound={rl['bound_s']*1e3:.2f}ms "
+              f"mfu={rl['roofline_mfu']:.3f}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--absorb-mla", action="store_true")
+    ap.add_argument("--prune-tiles", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--int8-kv", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+
+    outdir = Path(args.out) / ("pod2" if args.multi_pod else "pod1")
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    archs = ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            cells.append((a, s))
+
+    failures = []
+    for a, s in cells:
+        name = f"{a}__{s}" + ("__absorb" if args.absorb_mla else "") + \
+            ("__prune" if args.prune_tiles else "") + \
+            ("__sp" if args.seq_parallel else "") + \
+            (f"__ga{args.grad_accum}" if args.grad_accum > 1 else "") + \
+            ("__int8kv" if args.int8_kv else "")
+        path = outdir / f"{name}.json"
+        if not cell_is_runnable(a, s):
+            rec = {"arch": a, "shape": s, "skipped": True,
+                   "reason": "long_500k needs sub-quadratic attention; "
+                             "this arch is pure full-attention (DESIGN.md)"}
+            path.write_text(json.dumps(rec, indent=1))
+            print(f"[{a} x {s}] SKIP (full-attention @ 500k)")
+            continue
+        try:
+            rec = run_cell(a, s, multi_pod=args.multi_pod,
+                           absorb_mla=args.absorb_mla,
+                           prune_tiles=args.prune_tiles,
+                           seq_parallel=args.seq_parallel,
+                           grad_accum=args.grad_accum,
+                           int8_kv=args.int8_kv)
+            path.write_text(json.dumps(rec, indent=1))
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failures.append((a, s, repr(e)))
+            traceback.print_exc()
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("dry-run complete:", len(cells), "cells")
+
+
+if __name__ == "__main__":
+    main()

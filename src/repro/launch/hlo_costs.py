@@ -1,0 +1,168 @@
+"""Collective-cost extraction from compiled HLO text.
+
+``compiled.cost_analysis()`` has no collective accounting, and XLA costs
+while-loop bodies exactly once.  This parser:
+
+  1. splits the HLO module into named computations,
+  2. finds every while op and reads its trip count from the loop-condition
+     computation's `constant(N)` bound,
+  3. walks the call graph (entry -> while bodies/conds -> nested) assigning a
+     multiplier = product of enclosing trip counts,
+  4. sums wire bytes for every all-gather / all-reduce / reduce-scatter /
+     all-to-all / collective-permute, weighted by the multiplier.
+
+Wire-byte model per op (ring algorithms, per-participating-device):
+  all-gather:       (g-1)/g * output_bytes
+  all-reduce:       2*(g-1)/g * input_bytes
+  reduce-scatter:   (g-1)/g * input_bytes
+  all-to-all:       (g-1)/g * input_bytes
+  collective-permute: input_bytes
+where g = replica-group size parsed from the op.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\([^)]*\)\s*->", re.M)
+_WHILE_RE = re.compile(
+    r"while\(.*?\)[^\n]*?condition=%?([\w\.\-]+)[^\n]*?body=%?([\w\.\-]+)"
+    r"|while\(.*?\)[^\n]*?body=%?([\w\.\-]+)[^\n]*?condition=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_CALL_RE = re.compile(r"\scall\([^\n]*?to_apply=%?([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(text: str) -> int:
+    """Total bytes over every shape literal in `text` (tuple shapes ok)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> dict[str, str]:
+    """computation name -> body text."""
+    comps: dict[str, str] = {}
+    lines = hlo.splitlines()
+    name, buf, depth = None, [], 0
+    for ln in lines:
+        if name is None:
+            m = _COMP_RE.match(ln.strip())
+            if m and ln.rstrip().endswith("{"):
+                name, buf, depth = m.group(1), [], 1
+            continue
+        depth += ln.count("{") - ln.count("}")
+        if depth <= 0:
+            comps[name] = "\n".join(buf)
+            name = None
+        else:
+            buf.append(ln)
+    return comps
+
+
+def _trip_count(cond_text: str) -> int:
+    consts = [int(c) for c in _CONST_RE.findall(cond_text)]
+    return max(consts) if consts else 1
+
+
+@dataclass
+class CollectiveReport:
+    wire_bytes: float = 0.0
+    by_kind: dict = field(default_factory=lambda: defaultdict(float))
+    ops: list = field(default_factory=list)   # (kind, bytes, multiplier)
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m and m.group(1).strip():
+        first = m.group(1).split("}")[0].strip("{} ")
+        ids = [x for x in first.split(",") if x.strip() != ""]
+        return max(len(ids), 1)
+    return total_devices
+
+
+def collective_costs(hlo: str, total_devices: int) -> CollectiveReport:
+    comps = _split_computations(hlo)
+    # entry computation: the one marked ENTRY, else largest
+    entry_m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.M)
+    entry = entry_m.group(1) if entry_m else max(comps, key=lambda k: len(comps[k]))
+
+    mult: dict[str, float] = defaultdict(float)
+
+    def visit(comp: str, m: float, seen: tuple):
+        if comp not in comps or comp in seen:
+            return
+        mult[comp] += m
+        body = comps[comp]
+        for wm in _WHILE_RE.finditer(body):
+            cond = wm.group(1) or wm.group(4)
+            wbody = wm.group(2) or wm.group(3)
+            n = _trip_count(comps.get(cond, ""))
+            visit(wbody, m * n, seen + (comp,))
+            visit(cond, m * (n + 1), seen + (comp,))
+        for cm_ in _CALL_RE.finditer(body):
+            visit(cm_.group(1), m, seen + (comp,))
+
+    visit(entry, 1.0, ())
+
+    rep = CollectiveReport()
+    for comp, m in mult.items():
+        for ln in comps.get(comp, "").splitlines():
+            for kind in COLLECTIVES:
+                if re.search(rf"\b{kind}\(", ln) or f" {kind}(" in ln:
+                    # operand bytes: shapes inside the op's argument list;
+                    # output bytes: shape before the '=' op name
+                    lhs, _, rhs = ln.partition("=")
+                    out_b = shape_bytes(lhs) or shape_bytes(rhs.split(kind)[0])
+                    arg_text = rhs.split(kind, 1)[1] if kind in rhs else ""
+                    in_b = shape_bytes(arg_text.split("),")[0]) or out_b
+                    g = _group_size(ln, total_devices)
+                    f = (g - 1) / max(g, 1)
+                    if kind == "all-gather":
+                        b = f * out_b
+                    elif kind == "all-reduce":
+                        b = 2 * f * in_b
+                    elif kind == "reduce-scatter":
+                        b = f * in_b
+                    elif kind == "all-to-all":
+                        b = f * in_b
+                    else:  # collective-permute
+                        b = in_b
+                    rep.wire_bytes += m * b
+                    rep.by_kind[kind] += m * b
+                    rep.ops.append((kind, b, m, g))
+                    break
+    return rep
+
+
+def while_trip_counts(hlo: str) -> dict[str, int]:
+    comps = _split_computations(hlo)
+    out = {}
+    for comp, body in comps.items():
+        for wm in _WHILE_RE.finditer(body):
+            cond = wm.group(1) or wm.group(4)
+            wbody = wm.group(2) or wm.group(3)
+            out[wbody] = _trip_count(comps.get(cond, ""))
+    return out

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state.  Single pod = (data=16, model=16) = 256 chips (TPU v5e pod);
+multi-pod adds a leading "pod" axis (2 pods = 512 chips).  Batch shards over
+("pod","data") so cross-pod traffic is gradient all-reduce only.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have {len(devices)}; "
+            "the dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count"
+            "=512 before importing jax")
+    devs = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """1-device mesh for smoke tests / examples on the CPU container."""
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))

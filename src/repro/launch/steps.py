@@ -1,0 +1,156 @@
+"""jit-able step functions with shardings attached — used by the dry-run,
+the trainer, and the server."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ShapeCell, input_specs
+from repro.distributed import sharding as sh
+from repro.models import common as cm
+from repro.models.api import model_api
+from repro.optim import adamw
+
+
+def _ns(mesh, pspecs):
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _logits_pspec(mesh, global_batch: int, vocab: int) -> P:
+    import numpy as np
+    dpa = sh.dp_axes(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in dpa])) or 1
+    batch = dpa if (global_batch % dp == 0 and global_batch >= dp) else None
+    v = "model" if vocab % mesh.shape["model"] == 0 else None
+    return P(batch, v)
+
+
+def build_train_step(cfg: cm.ArchConfig, mesh: Mesh, cell: ShapeCell,
+                     ocfg: adamw.AdamWConfig = adamw.AdamWConfig()):
+    """Returns (jitted step, arg ShapeDtypeStructs w/ shardings)."""
+    api = model_api(cfg)
+    pspecs = api.param_specs()
+    ospecs = adamw.opt_state_specs(pspecs, ocfg)
+    ispecs = input_specs(cfg, cell)
+
+    p_sh = _ns(mesh, sh.param_pspecs(cfg, pspecs, mesh))
+    o_sh = _ns(mesh, sh.zero_pspecs(cfg, ospecs, mesh))
+    i_sh = _ns(mesh, sh.input_pspecs(cfg, ispecs, mesh,
+                                     global_batch=cell.global_batch))
+
+    A = max(cfg.grad_accum, 1)
+
+    def train_step(params, opt, batch):
+        if A == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: api.loss(p, batch), has_aux=True)(params)
+        else:
+            # gradient accumulation: scan over microbatches; activation
+            # memory scales with batch/A while grads accumulate in fp32
+            micro = jax.tree.map(
+                lambda x: x.reshape(A, x.shape[0] // A, *x.shape[1:]), batch)
+
+            def step_fn(carry, mb):
+                gsum, lsum = carry
+                (l, m), g = jax.value_and_grad(
+                    lambda p: api.loss(p, mb), has_aux=True)(params)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (gsum, lsum), ms = jax.lax.scan(
+                step_fn, (g0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / A, gsum)
+            loss = lsum / A
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        new_params, new_opt, om = adamw.adamw_update(grads, opt, params, ocfg)
+        return new_params, new_opt, {**metrics, **om, "loss": loss}
+
+    rep = NamedSharding(mesh, P())
+    step = jax.jit(train_step,
+                   in_shardings=(p_sh, o_sh, i_sh),
+                   out_shardings=(p_sh, o_sh, rep),
+                   donate_argnums=(0, 1))
+    args = (
+        jax.tree.map(lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                                       sharding=s),
+                     pspecs, p_sh),
+        jax.tree.map(lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                                       sharding=s),
+                     ospecs, o_sh),
+        jax.tree.map(lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                                       sharding=s),
+                     ispecs, i_sh),
+    )
+    return step, args
+
+
+def build_prefill_step(cfg: cm.ArchConfig, mesh: Mesh, cell: ShapeCell):
+    api = model_api(cfg)
+    pspecs = api.param_specs()
+    ispecs = input_specs(cfg, cell)
+    cspecs = api.cache_specs(cell.global_batch, cell.seq_len)
+
+    p_sh = _ns(mesh, sh.param_pspecs(cfg, pspecs, mesh))
+    i_sh = _ns(mesh, sh.input_pspecs(cfg, ispecs, mesh,
+                                     global_batch=cell.global_batch))
+    c_sh = _ns(mesh, sh.cache_pspecs(cfg, cspecs, mesh,
+                                     global_batch=cell.global_batch))
+    logit_sh = NamedSharding(mesh, _logits_pspec(mesh, cell.global_batch, cfg.vocab_size))
+
+    def prefill_step(params, batch, caches):
+        return api.prefill(params, batch, caches)
+
+    step = jax.jit(prefill_step,
+                   in_shardings=(p_sh, i_sh, c_sh),
+                   out_shardings=(logit_sh, c_sh),
+                   donate_argnums=(2,))
+    mk = lambda specs, shs: jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        specs, shs)
+    return step, (mk(pspecs, p_sh), mk(ispecs, i_sh), mk(cspecs, c_sh))
+
+
+def build_decode_step(cfg: cm.ArchConfig, mesh: Mesh, cell: ShapeCell):
+    api = model_api(cfg)
+    pspecs = api.param_specs()
+    ispecs = input_specs(cfg, cell)
+    cspecs = api.cache_specs(cell.global_batch, cell.seq_len)
+
+    p_sh = _ns(mesh, sh.param_pspecs(cfg, pspecs, mesh))
+    i_sh = _ns(mesh, sh.input_pspecs(cfg, ispecs, mesh,
+                                     global_batch=cell.global_batch))
+    c_sh = _ns(mesh, sh.cache_pspecs(cfg, cspecs, mesh,
+                                     global_batch=cell.global_batch))
+    logit_sh = NamedSharding(mesh, _logits_pspec(mesh, cell.global_batch, cfg.vocab_size))
+
+    def decode_step(params, tokens, caches, pos):
+        return api.decode(params, tokens, caches, pos)
+
+    step = jax.jit(decode_step,
+                   in_shardings=(p_sh, i_sh["tokens"], c_sh,
+                                 NamedSharding(mesh, P())),
+                   out_shardings=(logit_sh, c_sh),
+                   donate_argnums=(2,))
+    mk = lambda specs, shs: jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        specs, shs)
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32,
+                                    sharding=NamedSharding(mesh, P()))
+    return step, (mk(pspecs, p_sh), mk(ispecs, i_sh)["tokens"],
+                  mk(cspecs, c_sh), pos_spec)
+
+
+def build_step(cfg, mesh, cell):
+    if cell.kind == "train":
+        return build_train_step(cfg, mesh, cell)
+    if cell.kind == "prefill":
+        return build_prefill_step(cfg, mesh, cell)
+    return build_decode_step(cfg, mesh, cell)

@@ -1,0 +1,98 @@
+"""Training launcher: any registered arch, single host or production mesh.
+
+Fault tolerance: checkpoints every --ckpt-every steps (atomic, manifest'd);
+on start, auto-resumes from the latest complete checkpoint.  --kill-at N
+simulates a node failure mid-run (process aborts after step N) — rerunning
+the same command continues from the last checkpoint, which is exactly the
+restart story at pod scale.  Optional int8 gradient compression with error
+feedback (--compress-grads) for the cross-pod axis.
+
+Example (the ~100M end-to-end run):
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch semanticxr-captioner-110m --steps 200 --batch 8 --seq 256
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt as ckpt_mod
+from repro.configs import get_config
+from repro.data import tokens as tok
+from repro.distributed import collectives as coll
+from repro.models.api import model_api
+from repro.optim import adamw
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="semanticxr-captioner-110m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--kill-at", type=int, default=0,
+                    help="simulate node failure after this step")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    api = model_api(cfg)
+    ocfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps,
+                             warmup_steps=min(50, args.steps // 4))
+
+    params = api.init(jax.random.key(0))
+    opt = adamw.init_opt_state(params, ocfg)
+    ef = coll.init_ef(params) if args.compress_grads else None
+
+    ckpt_dir = Path(args.ckpt_dir) / cfg.name
+    start = 0
+    last = ckpt_mod.latest_step(ckpt_dir)
+    if last is not None:
+        print(f"[restore] resuming from step {last}")
+        params = ckpt_mod.restore(ckpt_dir, last, params)
+        opt = ckpt_mod.restore(Path(ckpt_dir) / "opt", last, opt)
+        start = last
+
+    @jax.jit
+    def train_step(params, opt, ef, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: api.loss(p, batch), has_aux=True)(params)
+        if ef is not None:
+            grads, ef = coll.compress_grads_ef(grads, ef)
+        params, opt, om = adamw.adamw_update(grads, opt, params, ocfg)
+        return params, opt, ef, {"loss": loss, **metrics, **om}
+
+    it = tok.batch_iterator(args.batch, args.seq, seed=start,
+                            vocab_size=cfg.vocab_size)
+    t0 = time.time()
+    for step in range(start + 1, args.steps + 1):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt, ef, m = train_step(params, opt, ef, batch)
+        if step % args.log_every == 0 or step == args.steps:
+            tok_s = args.batch * args.seq * args.log_every / \
+                max(time.time() - t0, 1e-9)
+            print(f"step {step:5d} loss {float(m['loss']):.4f} "
+                  f"ce {float(m['ce']):.4f} gnorm {float(m['grad_norm']):.2f} "
+                  f"lr {float(m['lr']):.2e} tok/s {tok_s:.0f}")
+            t0 = time.time()
+        if args.ckpt_every and step % args.ckpt_every == 0:
+            ckpt_mod.save(ckpt_dir, step, params)
+            ckpt_mod.save(Path(ckpt_dir) / "opt", step, opt)
+        if args.kill_at and step == args.kill_at:
+            print(f"[fault-injection] simulated node failure at step {step}")
+            raise SystemExit(42)
+    print("training complete")
+    return params
+
+
+if __name__ == "__main__":
+    main()

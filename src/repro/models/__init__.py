@@ -1,0 +1,2 @@
+from repro.models.common import ArchConfig, MLAConfig, MambaConfig, MoEConfig, RWKVConfig
+from repro.models.api import ModelAPI, model_api

@@ -1,0 +1,91 @@
+"""Uniform model API over decoder-only LMs and the enc-dec family.
+
+Everything downstream (training loop, serving, dry-run) talks to this facade:
+    api = model_api(cfg)
+    api.param_specs() / api.init(key)
+    api.loss(params, batch)                     -> (scalar, metrics)
+    api.prefill(params, tokens/frames, caches)  -> (logits, caches)
+    api.decode(params, tokens, caches, pos)     -> (logits, caches)
+    api.cache_specs(batch, max_len)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import lm as lm_mod
+from repro.models import encdec as ed_mod
+
+
+@dataclass(frozen=True)
+class ModelAPI:
+    cfg: cm.ArchConfig
+    param_specs: Callable[[], Any]
+    init: Callable[[jax.Array], Any]
+    loss: Callable[..., Any]
+    forward: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+    cache_specs: Callable[[int, int], Any]
+    init_cache: Callable[[int, int], Any] | None = None
+
+
+def model_api(cfg: cm.ArchConfig) -> ModelAPI:
+    if cfg.encdec:
+        def _prefill(params, batch, caches=None):
+            enc_out = ed_mod.encode(params, batch["frames"], cfg)
+            ck, cv = ed_mod.cross_kv(params, enc_out, cfg)
+            kv = caches.self_kv if caches is not None else None
+            # decoder prompt: BOS token only; self cache stays empty until decode
+            B = batch["frames"].shape[0]
+            logits, _ = ed_mod.encdec_decode_step(
+                params, jnp.zeros((B, 1), jnp.int32), cfg,
+                ed_mod.EncDecCache(kv, ck, cv), pos=0)
+            return logits, ed_mod.EncDecCache(kv, ck, cv)
+
+        return ModelAPI(
+            cfg=cfg,
+            param_specs=lambda: ed_mod.encdec_param_specs(cfg),
+            init=lambda key: ed_mod.init_encdec_params(cfg, key),
+            loss=lambda params, batch, **kw: ed_mod.encdec_loss(
+                params, batch, cfg, **kw),
+            forward=lambda params, batch: ed_mod.encode(
+                params, batch["frames"], cfg),
+            prefill=_prefill,
+            decode=lambda params, tokens, caches, pos: ed_mod.encdec_decode_step(
+                params, tokens, cfg, caches, pos=pos),
+            cache_specs=lambda batch, max_len: ed_mod.encdec_cache_specs(
+                cfg, batch, max_len),
+        )
+
+    def _loss(params, batch, **kw):
+        return lm_mod.lm_loss(params, batch, cfg, **kw)
+
+    def _forward(params, batch):
+        logits, _ = lm_mod.forward_logits(
+            params, batch["tokens"], cfg,
+            extra_embeds=batch.get("extra_embeds"))
+        return logits
+
+    def _prefill(params, batch, caches):
+        return lm_mod.prefill(params, batch["tokens"], cfg, caches,
+                              extra_embeds=batch.get("extra_embeds"))
+
+    return ModelAPI(
+        cfg=cfg,
+        param_specs=lambda: lm_mod.lm_param_specs(cfg),
+        init=lambda key: lm_mod.init_lm_params(cfg, key),
+        loss=_loss,
+        forward=_forward,
+        prefill=_prefill,
+        decode=lambda params, tokens, caches, pos: lm_mod.decode_step(
+            params, tokens, cfg, caches, pos=pos),
+        cache_specs=lambda batch, max_len: lm_mod.lm_cache_specs(
+            cfg, batch, max_len),
+        init_cache=lambda batch, max_len: lm_mod.init_lm_cache(
+            cfg, batch, max_len),
+    )

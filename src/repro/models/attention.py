@@ -1,0 +1,333 @@
+"""Attention mixers: GQA full/sliding-window, gemma2 softcap, decode w/ KV cache.
+
+The train/prefill path is a flash-style two-level blocked softmax written in
+pure jnp (lax.scan over KV blocks with running max/sum) so that the lowered
+program never materializes an [S, S] score matrix — this is what keeps the
+32k-prefill dry-run memory sane and is the jnp oracle for the Pallas kernel
+in ``repro.kernels.flash_attention``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def attn_param_specs(cfg: cm.ArchConfig) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p = {
+        "wq": cm.spec((d, h * dh), cfg.dtype),
+        "wk": cm.spec((d, kv * dh), cfg.dtype),
+        "wv": cm.spec((d, kv * dh), cfg.dtype),
+        "wo": cm.spec((h * dh, d), cfg.dtype),
+    }
+    if cfg.qk_norm:
+        p["q_scale"] = cm.spec((dh,), cfg.dtype)
+        p["k_scale"] = cm.spec((dh,), cfg.dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Core blocked attention (prefill / training)
+# ---------------------------------------------------------------------------
+
+def _tile_scores(q, k, scale, softcap_val):
+    # q: [B, Cq, K, G, dh]  k: [B, Ck, K, dh] -> s: [B, K, G, Cq, Ck]
+    # fp32 accumulation via preferred_element_type (no operand up-cast: the
+    # cast would materialize a 2x copy of the KV cache in HBM)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap_val:
+        s = cm.softcap(s, softcap_val)
+    return s
+
+
+def blocked_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                      softcap_val: float = 0.0, q_offset: int = 0,
+                      kv_len: jax.Array | None = None,
+                      q_chunk: int = 1024, k_chunk: int = 1024,
+                      prune: bool = False):
+    """q: [B,S,H,dh]; k,v: [B,T,Kv,dh]. window>0 => sliding-window causal.
+
+    ``q_offset``: absolute position of q[0] (prefill continuation / decode).
+    ``kv_len``: optional dynamic number of valid kv entries (decode cache).
+    ``prune``: skip KV tiles that the causal/window mask would fully zero
+    (beyond-paper §Perf optimization — the baseline sweeps every tile).
+    Returns [B,S,H,dh].
+    """
+    B, S, H, dh = q.shape
+    T, K = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    G = H // K
+    scale = dh ** -0.5
+    q_chunk = min(q_chunk, S)
+    k_chunk = min(k_chunk, T)
+    pad_q = (-S) % q_chunk
+    pad_k = (-T) % k_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sp, Tp = S + pad_q, T + pad_k
+    nq, nk = Sp // q_chunk, Tp // k_chunk
+    qb = q.reshape(B, nq, q_chunk, K, G, dh)
+    kb = k.reshape(B, nk, k_chunk, K, dh)
+    vb = v.reshape(B, nk, k_chunk, K, dv)
+    valid_t = jnp.asarray(T if kv_len is None else kv_len, jnp.int32)
+
+    def q_block(qi, qtile):
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def tile_update(carry, ki, ktile, vtile):
+            m, l, acc = carry
+            kpos = ki * k_chunk + jnp.arange(k_chunk)
+            s = _tile_scores(qtile, ktile, scale, softcap_val)
+            mask = kpos[None, :] < valid_t
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p.astype(vtile.dtype), vtile,
+                preferred_element_type=jnp.float32)
+            return m_new, l_new, acc_new
+
+        m0 = jnp.full((B, K, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, K, G, q_chunk, dv), jnp.float32)
+
+        ks = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(
+            lambda c, inp: (tile_update(c, *inp), None), (m0, l0, a0),
+            (ks, jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # [B,K,G,Cq,dh] -> [B,Cq,K,G,dh]
+        return jnp.transpose(out, (0, 3, 1, 2, 4))
+
+    def q_block_pruned(qi: int):
+        """Static causal/window KV band for q block ``qi`` (differentiable:
+        bounds are trace-time constants, unlike a dynamic fori_loop)."""
+        qtile = qb[:, qi]
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        hi = nk if not causal else min(
+            (q_offset + (qi + 1) * q_chunk + k_chunk - 1) // k_chunk, nk)
+        lo = 0 if not window else max(
+            (q_offset + qi * q_chunk - window + 1) // k_chunk, 0)
+        m0 = jnp.full((B, K, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, K, G, q_chunk, dv), jnp.float32)
+
+        def tile_update(carry, ki, ktile, vtile):
+            m, l, acc = carry
+            kpos = ki * k_chunk + jnp.arange(k_chunk)
+            s = _tile_scores(qtile, ktile, scale, softcap_val)
+            mask = kpos[None, :] < valid_t
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p.astype(vtile.dtype), vtile,
+                preferred_element_type=jnp.float32)
+            return m_new, l_new, acc_new
+
+        ks = jnp.arange(lo, hi)
+        (m, l, acc), _ = jax.lax.scan(
+            lambda c, inp: (tile_update(c, *inp), None), (m0, l0, a0),
+            (ks, jnp.moveaxis(kb[:, lo:hi], 1, 0),
+             jnp.moveaxis(vb[:, lo:hi], 1, 0)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.transpose(out, (0, 3, 1, 2, 4))
+
+    if prune:
+        out = jnp.stack([q_block_pruned(i) for i in range(nq)], axis=1)
+    else:
+        out = jax.lax.map(lambda args: q_block(*args),
+                          (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)))
+        out = jnp.moveaxis(out, 0, 1)
+    out = out.reshape(B, Sp, K, G, dv)[:, :S]
+    return out.reshape(B, S, H, dv).astype(v.dtype)
+
+
+def decode_attention(q, k, v, *, cache_len, window: int = 0,
+                     softcap_val: float = 0.0, ring: bool = False):
+    """Single-position decode. q: [B,1,H,dh]; k,v: [B,T,Kv,dh] cache.
+
+    ``cache_len``: number of valid entries *including* the token just written.
+    ``ring``: cache is a ring buffer (sliding window) — all T slots valid once
+    cache_len >= T; entry ages handled by the window mask being implicit.
+    """
+    B, _, H, dh = q.shape
+    T, K = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    G = H // K
+    scale = dh ** -0.5
+    qh = q.reshape(B, 1, K, G, dh)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qh, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap_val:
+        s = cm.softcap(s, softcap_val)
+    tpos = jnp.arange(T)
+    if ring:
+        valid = (tpos < cache_len)  # ring: all < min(cache_len, T) valid
+    else:
+        valid = tpos < cache_len
+        if window:
+            valid &= (cache_len - 1 - tpos) < window
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, dv).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full mixer: projections + rope + attention (+cache plumbing)
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array          # [B, T, Kv, dh]  (bf16, or int8 when quantized)
+    v: jax.Array
+    length: jax.Array     # [] int32 — entries written so far
+    k_scale: jax.Array | None = None   # [B, T, Kv, 1] f32 (int8 mode)
+    v_scale: jax.Array | None = None
+
+
+def _cache_layout(cfg, batch, T):
+    shape = (batch, T, cfg.n_kv_heads, cfg.d_head)
+    if cfg.kv_cache_dtype == "int8":
+        return shape, jnp.int8, (batch, T, cfg.n_kv_heads, 1)
+    return shape, cfg.dtype, None
+
+
+def init_kv_cache(cfg: cm.ArchConfig, batch: int, max_len: int,
+                  *, window: bool = False) -> KVCache:
+    T = min(max_len, cfg.sliding_window) if window else max_len
+    shape, dt, sshape = _cache_layout(cfg, batch, T)
+    sc = None if sshape is None else jnp.zeros(sshape, jnp.float32)
+    return KVCache(k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt),
+                   length=jnp.zeros((), jnp.int32), k_scale=sc,
+                   v_scale=None if sshape is None else jnp.zeros(
+                       sshape, jnp.float32))
+
+
+def kv_cache_specs(cfg: cm.ArchConfig, batch: int, max_len: int,
+                   *, window: bool = False) -> KVCache:
+    T = min(max_len, cfg.sliding_window) if window else max_len
+    shape, dt, sshape = _cache_layout(cfg, batch, T)
+    sc = None if sshape is None else cm.spec(sshape, jnp.float32)
+    return KVCache(k=cm.spec(shape, dt), v=cm.spec(shape, dt),
+                   length=cm.spec((), jnp.int32), k_scale=sc,
+                   v_scale=None if sshape is None else cm.spec(sshape,
+                                                               jnp.float32))
+
+
+def _quantize_kv(x):
+    """[B,S,K,dh] -> (int8 values, [B,S,K,1] f32 scales)."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    s = jnp.maximum(s, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127)
+    return q.astype(jnp.int8), s
+
+
+def _dequantize_kv(q, s, dtype):
+    return (q.astype(jnp.float32) * s).astype(dtype)
+
+
+def attention_mixer(params: dict, x: jax.Array, cfg: cm.ArchConfig, *,
+                    kind: str, positions: jax.Array,
+                    cache: KVCache | None = None):
+    """x: [B,S,D]. Returns (y, new_cache). Prefill when cache is None."""
+    B, S, D = x.shape
+    H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = (x @ params["wq"]).reshape(B, S, H, dh)
+    k = (x @ params["wk"]).reshape(B, S, K, dh)
+    v = (x @ params["wv"]).reshape(B, S, K, dh)
+    if cfg.qk_norm:
+        q = cm.rms_norm(q, params["q_scale"], cfg.norm_eps)
+        k = cm.rms_norm(k, params["k_scale"], cfg.norm_eps)
+    q = cm.apply_rope(q, positions, cfg.rope_theta)
+    k = cm.apply_rope(k, positions, cfg.rope_theta)
+
+    window = cfg.sliding_window if kind == cm.MIXER_SWA else 0
+    cap = cfg.attn_logit_softcap
+
+    if cache is None:
+        o = blocked_attention(q, k, v, causal=True, window=window,
+                              softcap_val=cap, q_chunk=cfg.attn_chunk,
+                              prune=cfg.prune_tiles)
+        new_cache = None
+    elif S > 1:
+        # prefill-fill: run blocked attention, then write k/v into the cache
+        o = blocked_attention(q, k, v, causal=True, window=window,
+                              softcap_val=cap, q_chunk=cfg.attn_chunk,
+                              prune=cfg.prune_tiles)
+        T = cache.k.shape[1]
+        int8 = cfg.kv_cache_dtype == "int8"
+        if int8:
+            k, ks = _quantize_kv(k)
+            v, vs = _quantize_kv(v)
+
+        def place(x, like_dtype):
+            if window and T == window and S >= window:
+                # ring cache: keep last `window` entries at slot p % window
+                shift = (S - window) % window
+                return jnp.roll(x[:, -window:], shift, axis=1).astype(
+                    like_dtype)
+            pad = ((0, 0), (0, T - S)) + ((0, 0),) * (x.ndim - 2)
+            return jnp.pad(x, pad).astype(like_dtype)
+
+        new_cache = KVCache(
+            k=place(k, cache.k.dtype), v=place(v, cache.v.dtype),
+            length=jnp.asarray(S, jnp.int32),
+            k_scale=place(ks, jnp.float32) if int8 else None,
+            v_scale=place(vs, jnp.float32) if int8 else None)
+    else:
+        # decode: S == 1; write into the cache then attend.
+        T = cache.k.shape[1]
+        is_ring = window > 0 and T == window
+        int8 = cfg.kv_cache_dtype == "int8"
+        slot = (cache.length % T) if is_ring else jnp.minimum(cache.length, T - 1)
+        if int8:
+            k, ks = _quantize_kv(k)
+            v, vs = _quantize_kv(v)
+            ksc = jax.lax.dynamic_update_slice(cache.k_scale, ks,
+                                               (0, slot, 0, 0))
+            vsc = jax.lax.dynamic_update_slice(cache.v_scale, vs,
+                                               (0, slot, 0, 0))
+        kc = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                          (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                          (0, slot, 0, 0))
+        new_len = cache.length + 1
+        k_read = _dequantize_kv(kc, ksc, cfg.dtype) if int8 else kc
+        v_read = _dequantize_kv(vc, vsc, cfg.dtype) if int8 else vc
+        o = decode_attention(q, k_read, v_read, cache_len=new_len,
+                             window=window, softcap_val=cap, ring=is_ring)
+        new_cache = KVCache(kc, vc, new_len,
+                            k_scale=ksc if int8 else None,
+                            v_scale=vsc if int8 else None)
+
+    y = o.reshape(B, S, H * dh) @ params["wo"]
+    return y, new_cache

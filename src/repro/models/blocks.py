@@ -1,0 +1,125 @@
+"""Decoder block composition: pre-norm mixer + pre-norm MLP/MoE.
+
+A block's (mixer, mlp) kinds come from the arch's period pattern; the cache
+pytree type follows the mixer kind.  RWKV blocks own a single fused cache
+(token-shift states live in both halves).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import mamba as mamba_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+
+
+def block_param_specs(cfg: cm.ArchConfig, mixer_kind: str, mlp_kind: str,
+                      d_ff: int | None = None) -> dict:
+    p: dict[str, Any] = {"ln1_scale": cm.spec((cfg.d_model,), cfg.dtype)}
+    if mixer_kind in (cm.MIXER_FULL, cm.MIXER_SWA, cm.MIXER_GLOBAL):
+        p["mixer"] = attn.attn_param_specs(cfg)
+    elif mixer_kind == cm.MIXER_MLA:
+        p["mixer"] = mla_mod.mla_param_specs(cfg)
+    elif mixer_kind == cm.MIXER_MAMBA:
+        p["mixer"] = mamba_mod.mamba_param_specs(cfg)
+    elif mixer_kind == cm.MIXER_RWKV6:
+        p["mixer"] = rwkv_mod.rwkv_tm_param_specs(cfg)
+    else:
+        raise ValueError(mixer_kind)
+
+    p["ln2_scale"] = cm.spec((cfg.d_model,), cfg.dtype)
+    if mixer_kind == cm.MIXER_RWKV6:
+        p["mlp"] = rwkv_mod.rwkv_cm_param_specs(cfg)
+    elif mlp_kind == cm.MLP_DENSE:
+        p["mlp"] = mlp_mod.mlp_param_specs(cfg, d_ff)
+    elif mlp_kind == cm.MLP_MOE:
+        p["mlp"] = moe_mod.moe_param_specs(cfg)
+    else:
+        raise ValueError(mlp_kind)
+    return p
+
+
+def block_cache_specs(cfg: cm.ArchConfig, mixer_kind: str, batch: int,
+                      max_len: int):
+    if mixer_kind in (cm.MIXER_FULL, cm.MIXER_GLOBAL):
+        return attn.kv_cache_specs(cfg, batch, max_len)
+    if mixer_kind == cm.MIXER_SWA:
+        return attn.kv_cache_specs(cfg, batch, max_len, window=True)
+    if mixer_kind == cm.MIXER_MLA:
+        return mla_mod.mla_cache_specs(cfg, batch, max_len)
+    if mixer_kind == cm.MIXER_MAMBA:
+        return mamba_mod.mamba_cache_specs(cfg, batch)
+    if mixer_kind == cm.MIXER_RWKV6:
+        return rwkv_mod.rwkv_cache_specs(cfg, batch)
+    raise ValueError(mixer_kind)
+
+
+def init_block_cache(cfg: cm.ArchConfig, mixer_kind: str, batch: int,
+                     max_len: int):
+    if mixer_kind in (cm.MIXER_FULL, cm.MIXER_GLOBAL):
+        return attn.init_kv_cache(cfg, batch, max_len)
+    if mixer_kind == cm.MIXER_SWA:
+        return attn.init_kv_cache(cfg, batch, max_len, window=True)
+    if mixer_kind == cm.MIXER_MLA:
+        return mla_mod.init_mla_cache(cfg, batch, max_len)
+    if mixer_kind == cm.MIXER_MAMBA:
+        return mamba_mod.init_mamba_cache(cfg, batch)
+    if mixer_kind == cm.MIXER_RWKV6:
+        return rwkv_mod.init_rwkv_cache(cfg, batch)
+    raise ValueError(mixer_kind)
+
+
+class BlockOut(NamedTuple):
+    x: jax.Array
+    cache: Any            # updated cache (decode) or None
+    aux_loss: jax.Array   # MoE load-balance contribution
+
+
+def block_apply(params: dict, x: jax.Array, cfg: cm.ArchConfig, *,
+                mixer_kind: str, mlp_kind: str, positions: jax.Array,
+                cache=None, n_groups: int = 1) -> BlockOut:
+    aux = jnp.zeros((), jnp.float32)
+    h = cm.rms_norm(x, params["ln1_scale"], cfg.norm_eps)
+
+    rwkv_new = None
+    if mixer_kind in (cm.MIXER_FULL, cm.MIXER_SWA, cm.MIXER_GLOBAL):
+        y, new_cache = attn.attention_mixer(params["mixer"], h, cfg,
+                                            kind=mixer_kind,
+                                            positions=positions, cache=cache)
+    elif mixer_kind == cm.MIXER_MLA:
+        y, new_cache = mla_mod.mla_mixer(params["mixer"], h, cfg,
+                                         positions=positions, cache=cache)
+    elif mixer_kind == cm.MIXER_MAMBA:
+        y, new_cache = mamba_mod.mamba_mixer(params["mixer"], h, cfg,
+                                             cache=cache)
+    elif mixer_kind == cm.MIXER_RWKV6:
+        y, (state, tm_prev) = rwkv_mod.rwkv_time_mix(params["mixer"], h, cfg,
+                                                     cache=cache)
+        rwkv_new = (state, tm_prev)
+        new_cache = cache
+    else:
+        raise ValueError(mixer_kind)
+    x = x + y
+
+    h = cm.rms_norm(x, params["ln2_scale"], cfg.norm_eps)
+    if mixer_kind == cm.MIXER_RWKV6:
+        y, cm_prev = rwkv_mod.rwkv_channel_mix(params["mlp"], h, cfg,
+                                               cache=cache)
+        state, tm_prev = rwkv_new
+        new_cache = None if cache is None else rwkv_mod.RWKVCache(
+            tm_prev=tm_prev, cm_prev=cm_prev, state=state)
+    elif mlp_kind == cm.MLP_MOE:
+        y, stats = moe_mod.moe_apply(params["mlp"], h, cfg,
+                                     n_groups=max(n_groups, cfg.moe_groups))
+        aux = stats.aux_loss
+    else:
+        y = mlp_mod.mlp_apply(params["mlp"], h, cfg)
+    x = x + y
+    return BlockOut(x=x, cache=new_cache, aux_loss=aux)

@@ -1,0 +1,281 @@
+"""Shared building blocks for the model zoo.
+
+Pure-functional JAX: parameters are pytrees of arrays; every layer is an
+``init_*`` (or a shape-spec) plus an ``apply``-style function.  No framework
+dependency — this substrate is what configs/ and the SemanticXR perception
+stack compose.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+# Mixer kinds understood by blocks.py.
+MIXER_FULL = "attn_full"          # dense causal attention
+MIXER_SWA = "attn_swa"            # sliding-window causal attention
+MIXER_GLOBAL = "attn_global"      # gemma2 "global" layer (full, with softcap)
+MIXER_MLA = "mla"                 # DeepSeek multi-head latent attention
+MIXER_MAMBA = "mamba"             # Mamba-1 selective SSM
+MIXER_RWKV6 = "rwkv6"             # RWKV-6 "Finch" time mixing
+
+MLP_DENSE = "dense"
+MLP_MOE = "moe"
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536          # 0 => no query compression
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+    # Decode-path weight absorption (beyond-paper serving optimization): score
+    # queries directly against the latent KV cache instead of re-expanding K/V.
+    absorb: bool = False
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0                 # 0 => ceil(d_model / 16)
+    chunk: int = 64                  # chunked-scan length (TPU-friendly)
+
+
+@dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    decay_lora: int = 64
+    mix_lora: int = 32
+    chunk: int = 64
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 1
+    # capacity factor for the GShard-style dense dispatch (baseline path)
+    capacity_factor: float = 1.25
+    router_dtype: Any = jnp.float32
+    # "dense" = GShard one-hot dispatch einsum (baseline, paper-faithful serving
+    # analogue); "ragged" = sort-based dropless grouped matmul (hillclimb).
+    dispatch: str = "dense"
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """One config describes every architecture in the assigned pool."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0                       # 0 => d_model // n_heads
+
+    # layer pattern: mixers[i % len(mixers)] / mlps[i % len(mlps)] after the
+    # dense prefix of ``n_dense_prefix`` layers (DeepSeek first-k-dense).
+    mixers: tuple = (MIXER_FULL,)
+    mlps: tuple = (MLP_DENSE,)
+    n_dense_prefix: int = 0
+    d_ff_dense_prefix: int = 0            # 0 => d_ff
+
+    # attention knobs
+    sliding_window: int = 4096
+    rope_theta: float = 10000.0
+    attn_logit_softcap: float = 0.0       # gemma2: 50.0
+    final_logit_softcap: float = 0.0      # gemma2: 30.0
+    qk_norm: bool = False
+
+    # family sub-configs
+    mla: MLAConfig | None = None
+    mamba: MambaConfig | None = None
+    rwkv: RWKVConfig | None = None
+    moe: MoEConfig | None = None
+
+    # encoder-decoder (whisper): n_layers is the decoder depth
+    encdec: bool = False
+    n_enc_layers: int = 0
+    enc_seq: int = 1500                   # stub conv frontend output frames
+
+    # modality frontend stub: None | "audio" | "vision"
+    frontend: str | None = None
+    n_frontend_tokens: int = 0            # vision: patch tokens per image
+
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    act: str = "silu"                     # mlp activation ("silu"|"gelu")
+    dtype: Any = jnp.bfloat16
+
+    # execution knobs
+    scan_layers: bool = True              # lax.scan over layer stack
+    remat: bool = True                    # activation checkpointing per layer
+    attn_chunk: int = 1024                # q-chunk for flash-style jnp attention
+    use_pallas: bool = False              # route hot ops through Pallas kernels
+    moe_groups: int = 1                   # MoE dispatch groups (align with DP)
+    prune_tiles: bool = False             # skip fully-masked attention tiles
+    # routed-expert weight layout: "2d" (E@model, ff@data — train-friendly)
+    # or "ep" (E@(data,model) full expert-parallel — serving-friendly)
+    moe_weight_shard: str = "2d"
+    # Megatron-style sequence parallelism: residual stream sharded
+    # (batch@act_shard[0], seq@act_shard[1]) between blocks; turns per-layer
+    # TP all-reduces into reduce-scatter/all-gather pairs and stores remat'd
+    # activations 1/tp-sized.  None = off.  e.g. (("pod","data"), "model")
+    # NOTE: measured counterproductive with the group-local MoE dispatch and
+    # blocked-attention reshapes (EXPERIMENTS.md §Perf, refuted iterations).
+    act_shard: tuple | None = None
+    grad_accum: int = 1                   # microbatches per train step
+    # rwkv time-mix weights: "model" shards d->d projections (train: grads
+    # stay sharded) at the cost of gathers around the head-grouped wkv
+    # recurrence; "replicated" removes the gathers (serving: 30x on decode —
+    # EXPERIMENTS §Perf)
+    rwkv_tm_shard: str = "model"
+    # KV cache storage: "bf16" or "int8" (per-token-per-head symmetric
+    # quantization — halves the decode KV-read roofline term)
+    kv_cache_dtype: str = "bf16"
+
+    def __post_init__(self):
+        if self.d_head == 0:
+            object.__setattr__(self, "d_head", self.d_model // max(self.n_heads, 1))
+
+    @property
+    def period(self) -> int:
+        return int(np.lcm(len(self.mixers), len(self.mlps)))
+
+    @property
+    def n_body_layers(self) -> int:
+        return self.n_layers - self.n_dense_prefix
+
+    @property
+    def n_periods(self) -> int:
+        assert self.n_body_layers % self.period == 0, (
+            f"{self.name}: body layers {self.n_body_layers} not divisible by "
+            f"period {self.period}")
+        return self.n_body_layers // self.period
+
+    def block_kinds(self, slot: int) -> tuple[str, str]:
+        """(mixer, mlp) for period slot ``slot``."""
+        return (self.mixers[slot % len(self.mixers)],
+                self.mlps[slot % len(self.mlps)])
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu,
+            "relu2": lambda x: jnp.square(jax.nn.relu(x))}[name]
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, d, 2, dtype=np.float64) / d))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, d]; positions: broadcastable to [..., seq]."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), dtype=jnp.float32)
+    angles = positions.astype(jnp.float32)[..., None] * freqs      # [..., S, d/2]
+    cos = jnp.cos(angles)[..., None, :]                            # [..., S, 1, d/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization from shape specs
+# ---------------------------------------------------------------------------
+
+def _leaf_init(key, path: str, shape, dtype):
+    """Init rule by naming convention: *_scale -> zeros (rms uses 1+scale),
+    *_bias -> zeros, embeddings & matmuls -> truncated normal / sqrt(fan_in)."""
+    if path.endswith("scale") or path.endswith("ln_s"):
+        return jnp.zeros(shape, dtype)
+    if path.endswith("bias") or path.endswith("ln_b"):
+        if path.endswith("ln_b"):
+            return jnp.zeros(shape, dtype)
+        return jnp.zeros(shape, dtype)
+    if path.endswith("A_log"):           # mamba: init A in [1, d_state]
+        d_state = shape[-1]
+        a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32), shape[:-1] + (1,))
+        return jnp.log(a).astype(dtype)
+    if path.endswith("dt_bias"):
+        # mamba dt bias ~ softplus^-1(uniform(1e-3, 1e-1))
+        u = jax.random.uniform(key, shape, jnp.float32,
+                               minval=math.log(1e-3), maxval=math.log(1e-1))
+        dt = jnp.exp(u)
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+    if path.endswith("decay_base"):      # rwkv per-channel decay speed
+        n = shape[-1]
+        base = -6.0 + 5.0 * (jnp.arange(n, dtype=jnp.float32) / max(n - 1, 1)) ** 0.7
+        return jnp.broadcast_to(base, shape).astype(dtype)
+    if path.endswith("mix_mu"):          # rwkv token-shift mixing in (0,1)
+        return jax.random.uniform(key, shape, jnp.float32, 0.3, 0.7).astype(dtype)
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    w = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std
+    return w.astype(dtype)
+
+
+def init_from_specs(key: jax.Array, specs) -> Any:
+    """specs: pytree of jax.ShapeDtypeStruct; returns initialized params."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(specs)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for (path, spec), k in zip(leaves, keys):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append(_leaf_init(k, name, spec.shape, spec.dtype))
+    return jax.tree_util.tree_unflatten(treedef, [l for l in out])
+
+
+def spec(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def count_params(specs) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(specs)))

@@ -1,0 +1,188 @@
+"""Encoder-decoder transformer (whisper-small backbone).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings [B, n_frames, d_model].  Encoder is
+bidirectional; decoder is causal self-attention + cross-attention to the
+encoder output.  Cross K/V are computed once at encode time and held as a
+fixed part of the serving cache (standard whisper serving layout).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models.attention import KVCache, blocked_attention, decode_attention
+
+
+def _stack(specs, n):
+    return jax.tree.map(lambda l: cm.spec((n,) + l.shape, l.dtype), specs)
+
+
+def _xattn_param_specs(cfg: cm.ArchConfig) -> dict:
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    return {"wq": cm.spec((d, h * dh), cfg.dtype),
+            "wk": cm.spec((d, h * dh), cfg.dtype),
+            "wv": cm.spec((d, h * dh), cfg.dtype),
+            "wo": cm.spec((h * dh, d), cfg.dtype)}
+
+
+def encdec_param_specs(cfg: cm.ArchConfig) -> dict:
+    d = cfg.d_model
+    enc_block = {"ln1_scale": cm.spec((d,), cfg.dtype),
+                 "mixer": attn.attn_param_specs(cfg),
+                 "ln2_scale": cm.spec((d,), cfg.dtype),
+                 "mlp": mlp_mod.mlp_param_specs(cfg)}
+    dec_block = {"ln1_scale": cm.spec((d,), cfg.dtype),
+                 "self": attn.attn_param_specs(cfg),
+                 "ln_x_scale": cm.spec((d,), cfg.dtype),
+                 "cross": _xattn_param_specs(cfg),
+                 "ln2_scale": cm.spec((d,), cfg.dtype),
+                 "mlp": mlp_mod.mlp_param_specs(cfg)}
+    return {
+        "embed": cm.spec((cfg.vocab_size, d), cfg.dtype),
+        "enc_body": _stack(enc_block, cfg.n_enc_layers),
+        "enc_final_scale": cm.spec((d,), cfg.dtype),
+        "dec_body": _stack(dec_block, cfg.n_layers),
+        "final_scale": cm.spec((d,), cfg.dtype),
+    }
+
+
+def init_encdec_params(cfg: cm.ArchConfig, key: jax.Array):
+    return cm.init_from_specs(key, encdec_param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+
+def encode(params, frames, cfg):
+    """frames: [B, S_enc, d] precomputed stub embeddings -> enc hidden."""
+    S = frames.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def layer(x, p):
+        h = cm.rms_norm(x, p["ln1_scale"], cfg.norm_eps)
+        B, S, _ = h.shape
+        H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        q = (h @ p["mixer"]["wq"]).reshape(B, S, H, dh)
+        k = (h @ p["mixer"]["wk"]).reshape(B, S, K, dh)
+        v = (h @ p["mixer"]["wv"]).reshape(B, S, K, dh)
+        q = cm.apply_rope(q, positions, cfg.rope_theta)
+        k = cm.apply_rope(k, positions, cfg.rope_theta)
+        o = blocked_attention(q, k, v, causal=False, q_chunk=cfg.attn_chunk)
+        x = x + o.reshape(B, S, H * dh) @ p["mixer"]["wo"]
+        h = cm.rms_norm(x, p["ln2_scale"], cfg.norm_eps)
+        x = x + mlp_mod.mlp_apply(p["mlp"], h, cfg)
+        return x, None
+
+    fn = jax.checkpoint(layer, prevent_cse=False) if cfg.remat else layer
+    x, _ = jax.lax.scan(fn, frames.astype(cfg.dtype), params["enc_body"])
+    return cm.rms_norm(x, params["enc_final_scale"], cfg.norm_eps)
+
+
+def _cross_attend(p, h, k_cross, v_cross, cfg):
+    B, S, _ = h.shape
+    H, dh = cfg.n_heads, cfg.d_head
+    q = (h @ p["wq"]).reshape(B, S, H, dh)
+    o = blocked_attention(q, k_cross, v_cross, causal=False,
+                          q_chunk=cfg.attn_chunk)
+    return o.reshape(B, S, H * dh) @ p["wo"]
+
+
+def cross_kv(params, enc_out, cfg):
+    """Per-layer cross K/V: [L, B, S_enc, H, dh] stacked."""
+    B, S, _ = enc_out.shape
+    H, dh = cfg.n_heads, cfg.d_head
+
+    def one(p):
+        k = (enc_out @ p["cross"]["wk"]).reshape(B, S, H, dh)
+        v = (enc_out @ p["cross"]["wv"]).reshape(B, S, H, dh)
+        return k, v
+
+    return jax.vmap(one)(params["dec_body"])
+
+
+def decode_train(params, tokens, enc_out, cfg):
+    """Teacher-forced decoder forward -> hidden [B, S_dec, d]."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def layer(x, p):
+        h = cm.rms_norm(x, p["ln1_scale"], cfg.norm_eps)
+        y, _ = attn.attention_mixer(p["self"], h, cfg, kind=cm.MIXER_FULL,
+                                    positions=positions, cache=None)
+        x = x + y
+        h = cm.rms_norm(x, p["ln_x_scale"], cfg.norm_eps)
+        B, _, _ = h.shape
+        H, dh = cfg.n_heads, cfg.d_head
+        k = (enc_out @ p["cross"]["wk"]).reshape(B, -1, H, dh)
+        v = (enc_out @ p["cross"]["wv"]).reshape(B, -1, H, dh)
+        x = x + _cross_attend(p["cross"], h, k, v, cfg)
+        h = cm.rms_norm(x, p["ln2_scale"], cfg.norm_eps)
+        x = x + mlp_mod.mlp_apply(p["mlp"], h, cfg)
+        return x, None
+
+    fn = jax.checkpoint(layer, prevent_cse=False) if cfg.remat else layer
+    x, _ = jax.lax.scan(fn, x, params["dec_body"])
+    return cm.rms_norm(x, params["final_scale"], cfg.norm_eps)
+
+
+def encdec_loss(params, batch, cfg, **_):
+    enc_out = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    x = decode_train(params, tokens, enc_out, cfg)
+    logits = (x @ params["embed"].T).astype(jnp.float32)
+    labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)), constant_values=-1)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                               axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum((lse - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+    return loss, {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+class EncDecCache(NamedTuple):
+    self_kv: Any        # stacked KVCache over decoder layers
+    cross_k: jax.Array  # [L, B, S_enc, H, dh]
+    cross_v: jax.Array
+
+
+def encdec_cache_specs(cfg: cm.ArchConfig, batch: int, max_len: int):
+    L, H, dh = cfg.n_layers, cfg.n_heads, cfg.d_head
+    kv = _stack(attn.kv_cache_specs(cfg, batch, max_len), L)
+    xs = cm.spec((L, batch, cfg.enc_seq, H, dh), cfg.dtype)
+    return EncDecCache(self_kv=kv, cross_k=xs, cross_v=xs)
+
+
+def encdec_decode_step(params, tokens, cfg, caches: EncDecCache, *, pos):
+    x = jnp.take(params["embed"], tokens, axis=0)   # [B,1,d]
+    positions = jnp.full((1, 1), pos, jnp.int32)
+
+    def layer(x, inp):
+        p, kv, ck, cv = inp
+        h = cm.rms_norm(x, p["ln1_scale"], cfg.norm_eps)
+        y, new_kv = attn.attention_mixer(p["self"], h, cfg,
+                                         kind=cm.MIXER_FULL,
+                                         positions=positions, cache=kv)
+        x = x + y
+        h = cm.rms_norm(x, p["ln_x_scale"], cfg.norm_eps)
+        x = x + _cross_attend(p["cross"], h, ck, cv, cfg)
+        h = cm.rms_norm(x, p["ln2_scale"], cfg.norm_eps)
+        x = x + mlp_mod.mlp_apply(p["mlp"], h, cfg)
+        return x, new_kv
+
+    x, new_kv = jax.lax.scan(
+        layer, x, (params["dec_body"], caches.self_kv, caches.cross_k,
+                   caches.cross_v))
+    x = cm.rms_norm(x, params["final_scale"], cfg.norm_eps)
+    logits = (x @ params["embed"].T)[:, 0]
+    return logits, EncDecCache(self_kv=new_kv, cross_k=caches.cross_k,
+                               cross_v=caches.cross_v)

@@ -1,0 +1,258 @@
+"""Full language model: embedding -> (prefix blocks + scanned periodic body)
+-> final norm -> vocab head.  Covers every assigned arch family.
+
+Layer stacking uses ``lax.scan`` over "periods" (one period = the arch's
+repeating block pattern, e.g. gemma2 [local, global], jamba 8-layer
+mamba/attn+dense/moe group) with per-slot stacked parameters — compact HLO,
+fast compiles at 61 layers, remat-per-period.
+
+Losses are computed with a sequence-chunked cross-entropy so the [B,S,V]
+logits tensor (33 GB/device at gemma2's 256k vocab) is never materialized.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import blocks as blk
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def _stack_specs(specs, n: int):
+    return jax.tree.map(lambda l: cm.spec((n,) + l.shape, l.dtype), specs)
+
+
+def lm_param_specs(cfg: cm.ArchConfig) -> dict:
+    d = cfg.d_model
+    specs: dict[str, Any] = {
+        "embed": cm.spec((cfg.vocab_size, d), cfg.dtype),
+        "final_scale": cm.spec((d,), cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = cm.spec((d, cfg.vocab_size), cfg.dtype)
+    if cfg.n_dense_prefix:
+        mk = cfg.mixers[0]
+        specs["prefix"] = [
+            blk.block_param_specs(cfg, mk, cm.MLP_DENSE,
+                                  cfg.d_ff_dense_prefix or cfg.d_ff)
+            for _ in range(cfg.n_dense_prefix)]
+    specs["body"] = [
+        _stack_specs(blk.block_param_specs(cfg, *cfg.block_kinds(s)),
+                     cfg.n_periods)
+        for s in range(cfg.period)]
+    if cfg.frontend == "vision":
+        specs["vis_proj"] = cm.spec((d, d), cfg.dtype)
+    return specs
+
+
+def init_lm_params(cfg: cm.ArchConfig, key: jax.Array):
+    return cm.init_from_specs(key, lm_param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def lm_cache_specs(cfg: cm.ArchConfig, batch: int, max_len: int) -> dict:
+    caches: dict[str, Any] = {}
+    if cfg.n_dense_prefix:
+        caches["prefix"] = [blk.block_cache_specs(cfg, cfg.mixers[0], batch,
+                                                  max_len)
+                            for _ in range(cfg.n_dense_prefix)]
+    caches["body"] = [
+        _stack_specs(blk.block_cache_specs(cfg, cfg.block_kinds(s)[0], batch,
+                                           max_len), cfg.n_periods)
+        for s in range(cfg.period)]
+    return caches
+
+
+def init_lm_cache(cfg: cm.ArchConfig, batch: int, max_len: int) -> dict:
+    def init_one(mk):
+        return blk.init_block_cache(cfg, mk, batch, max_len)
+
+    caches: dict[str, Any] = {}
+    if cfg.n_dense_prefix:
+        caches["prefix"] = [init_one(cfg.mixers[0])
+                            for _ in range(cfg.n_dense_prefix)]
+    caches["body"] = [
+        jax.tree.map(lambda l: jnp.broadcast_to(l, (cfg.n_periods,) + l.shape),
+                     init_one(cfg.block_kinds(s)[0]))
+        for s in range(cfg.period)]
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg, extra_embeds=None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)  # gemma-style embed scale
+    if extra_embeds is not None:
+        if "vis_proj" in params:
+            extra_embeds = extra_embeds @ params["vis_proj"]
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _run_blocks(params, x, cfg, *, positions, caches=None, n_groups=1):
+    """Shared trunk: prefix blocks then scanned body. Returns
+    (hidden, aux_loss, new_caches)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_caches: dict[str, Any] = {}
+    decode = caches is not None
+
+    if cfg.n_dense_prefix:
+        new_prefix = []
+        for i in range(cfg.n_dense_prefix):
+            c = caches["prefix"][i] if decode else None
+            out = blk.block_apply(
+                params["prefix"][i], x, cfg, mixer_kind=cfg.mixers[0],
+                mlp_kind=cm.MLP_DENSE, positions=positions, cache=c,
+                n_groups=n_groups)
+            x, aux = out.x, aux + out.aux_loss
+            new_prefix.append(out.cache)
+        if decode:
+            new_caches["prefix"] = new_prefix
+
+    def _constrain(x):
+        if cfg.act_shard is None or x.shape[1] == 1:
+            return x
+        from jax.sharding import PartitionSpec as P
+        batch_axes, seq_axis = cfg.act_shard
+        return jax.lax.with_sharding_constraint(
+            x, P(batch_axes, seq_axis, None))
+
+    def period_fn(carry, xs):
+        x, aux = carry
+        x = _constrain(x)
+        slot_params = xs[0] if decode else xs
+        slot_caches = xs[1] if decode else [None] * cfg.period
+        new_slot_caches = []
+        for s in range(cfg.period):
+            mk, lk = cfg.block_kinds(s)
+            out = blk.block_apply(slot_params[s], x, cfg, mixer_kind=mk,
+                                  mlp_kind=lk, positions=positions,
+                                  cache=slot_caches[s], n_groups=n_groups)
+            x, aux = out.x, aux + out.aux_loss
+            new_slot_caches.append(out.cache)
+        return (x, aux), (new_slot_caches if decode else None)
+
+    xs = (params["body"], caches["body"]) if decode else params["body"]
+    if cfg.scan_layers:
+        fn = jax.checkpoint(period_fn, prevent_cse=False) if cfg.remat else period_fn
+        (x, aux), ys = jax.lax.scan(fn, (x, aux), xs)
+        if decode:
+            new_caches["body"] = ys
+    else:
+        body_ys = [[] for _ in range(cfg.period)]
+        for i in range(cfg.n_periods):
+            sl = jax.tree.map(lambda l: l[i], xs)
+            (x, aux), ys = period_fn((x, aux), sl)
+            if decode:
+                for s in range(cfg.period):
+                    body_ys[s].append(ys[s])
+        if decode:
+            new_caches["body"] = [
+                jax.tree.map(lambda *ls: jnp.stack(ls), *body_ys[s])
+                for s in range(cfg.period)]
+    return x, aux, (new_caches if decode else None)
+
+
+def forward_hidden(params, tokens, cfg, *, extra_embeds=None):
+    x = _embed(params, tokens, cfg, extra_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    x, aux, _ = _run_blocks(params, x, cfg, positions=positions)
+    return cm.rms_norm(x, params["final_scale"], cfg.norm_eps), aux
+
+
+def _head(params, x, cfg):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ w
+    if cfg.final_logit_softcap:
+        logits = cm.softcap(logits.astype(jnp.float32),
+                            cfg.final_logit_softcap)
+    return logits
+
+
+def forward_logits(params, tokens, cfg, *, extra_embeds=None):
+    x, aux = forward_hidden(params, tokens, cfg, extra_embeds=extra_embeds)
+    return _head(params, x, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# Loss (sequence-chunked cross-entropy)
+# ---------------------------------------------------------------------------
+
+def lm_loss(params, batch: dict, cfg: cm.ArchConfig, *,
+            loss_chunk: int = 512, aux_weight: float = 0.01):
+    tokens = batch["tokens"]
+    x, aux = forward_hidden(params, tokens, cfg,
+                            extra_embeds=batch.get("extra_embeds"))
+    n_extra = x.shape[1] - tokens.shape[1]
+    labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)), constant_values=-1)
+    if n_extra:  # frontend tokens predict nothing
+        labels = jnp.concatenate(
+            [jnp.full((tokens.shape[0], n_extra), -1, labels.dtype), labels],
+            axis=1)
+    B, S, d = x.shape
+    loss_chunk = min(loss_chunk, S)
+    pad = (-S) % loss_chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n_chunks = (S + pad) // loss_chunk
+    xc = jnp.moveaxis(x.reshape(B, n_chunks, loss_chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, n_chunks, loss_chunk), 1, 0)
+
+    def chunk_fn(carry, inp):
+        tot, cnt = carry
+        xb, lb = inp
+        logits = _head(params, xb, cfg).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1)[..., 0]
+        mask = (lb >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lse - gold) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        chunk_fn, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, lc))
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving entry points
+# ---------------------------------------------------------------------------
+
+def prefill(params, tokens, cfg, caches, *, extra_embeds=None):
+    """Fill caches from a prompt; returns (last-token logits, caches)."""
+    x = _embed(params, tokens, cfg, extra_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    x, _, new_caches = _run_blocks(params, x, cfg, positions=positions,
+                                   caches=caches)
+    x = cm.rms_norm(x[:, -1:], params["final_scale"], cfg.norm_eps)
+    return _head(params, x, cfg)[:, 0], new_caches
+
+
+def decode_step(params, tokens, cfg, caches, *, pos):
+    """One decode step. tokens: [B,1]; pos: [] int32 absolute position.
+    Returns (logits [B,V], new caches)."""
+    x = _embed(params, tokens, cfg)
+    positions = jnp.full((1, 1), pos, jnp.int32)
+    x, _, new_caches = _run_blocks(params, x, cfg, positions=positions,
+                                   caches=caches)
+    x = cm.rms_norm(x, params["final_scale"], cfg.norm_eps)
+    return _head(params, x, cfg)[:, 0], new_caches

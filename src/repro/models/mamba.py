@@ -1,0 +1,133 @@
+"""Mamba-1 selective SSM mixer (Jamba's attention-free layers).
+
+TPU adaptation: the CUDA selective-scan kernel fuses a sequential recurrence
+per thread; here the recurrence is re-blocked for the MXU/VPU as an outer
+``lax.scan`` over time chunks carrying the [d_inner, d_state] state, with a
+parallel ``associative_scan`` inside each chunk.  Chunk length bounds the
+fp32 [chunk, d_inner, d_state] working set (the VMEM budget of the eventual
+Pallas port) instead of materializing the full-sequence scan buffer.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+def _dims(cfg: cm.ArchConfig):
+    mb = cfg.mamba
+    d_inner = mb.expand * cfg.d_model
+    dt_rank = mb.dt_rank or math.ceil(cfg.d_model / 16)
+    return d_inner, dt_rank, mb.d_state, mb.d_conv
+
+
+def mamba_param_specs(cfg: cm.ArchConfig) -> dict:
+    d = cfg.d_model
+    d_in, dt_rank, d_state, d_conv = _dims(cfg)
+    return {
+        "in_proj": cm.spec((d, 2 * d_in), cfg.dtype),
+        "conv_w": cm.spec((d_in, d_conv), cfg.dtype),
+        "conv_bias": cm.spec((d_in,), cfg.dtype),
+        "x_proj": cm.spec((d_in, dt_rank + 2 * d_state), cfg.dtype),
+        "dt_proj": cm.spec((dt_rank, d_in), cfg.dtype),
+        "dt_bias": cm.spec((d_in,), jnp.float32),
+        "A_log": cm.spec((d_in, d_state), jnp.float32),
+        "D": cm.spec((d_in,), jnp.float32),
+        "out_proj": cm.spec((d_in, d), cfg.dtype),
+    }
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # [B, d_conv-1, d_inner] — last inputs to the causal conv
+    ssm: jax.Array    # [B, d_inner, d_state]
+
+
+def mamba_cache_specs(cfg: cm.ArchConfig, batch: int) -> MambaCache:
+    d_in, _, d_state, d_conv = _dims(cfg)
+    return MambaCache(conv=cm.spec((batch, d_conv - 1, d_in), cfg.dtype),
+                      ssm=cm.spec((batch, d_in, d_state), jnp.float32))
+
+
+def init_mamba_cache(cfg: cm.ArchConfig, batch: int) -> MambaCache:
+    d_in, _, d_state, d_conv = _dims(cfg)
+    return MambaCache(conv=jnp.zeros((batch, d_conv - 1, d_in), cfg.dtype),
+                      ssm=jnp.zeros((batch, d_in, d_state), jnp.float32))
+
+
+def _causal_conv(x, w, b, prev):
+    """x: [B,S,d_in]; w: [d_in,K]; prev: [B,K-1,d_in] carried inputs."""
+    K = w.shape[1]
+    xp = jnp.concatenate([prev, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[:, i] for i in range(K))
+    return y + b, xp[:, -(K - 1):]
+
+
+def _ssm_chunk(carry, inp, A):
+    """One time chunk. carry: h [B,d_in,N] fp32. inp: per-chunk tensors."""
+    h0 = carry
+    u, B_, C_, dt = inp        # u,dt: [B,C,d_in]; B_,C_: [B,C,N]
+    # discretize: decay a = exp(dt*A)  [B,C,d_in,N]; drive b = dt*u ⊗ B
+    lam = jnp.exp(dt[..., None] * A)                       # decay factors
+    drive = (dt * u)[..., None] * B_[:, :, None, :]        # [B,C,d_in,N]
+    # fold h0 into the first step's drive, then parallel prefix over the chunk
+    drive = drive.at[:, 0].add(lam[:, 0] * h0)
+
+    def op(a, b):
+        return (a[0] * b[0], b[0] * a[1] + b[1])
+
+    _, h_all = jax.lax.associative_scan(op, (lam, drive), axis=1)
+    y = jnp.einsum("bcdn,bcn->bcd", h_all, C_)
+    return h_all[:, -1], y
+
+
+def mamba_mixer(params: dict, x: jax.Array, cfg: cm.ArchConfig, *,
+                cache: MambaCache | None = None):
+    """x: [B,S,D]. Prefill/train when cache is None; else single-token decode."""
+    d_in, dt_rank, d_state, d_conv = _dims(cfg)
+    B, S, _ = x.shape
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+
+    prev = (jnp.zeros((B, d_conv - 1, d_in), xin.dtype) if cache is None
+            else cache.conv)
+    xc, conv_state = _causal_conv(xin, params["conv_w"], params["conv_bias"], prev)
+    xc = jax.nn.silu(xc)
+
+    dbc = xc @ params["x_proj"]
+    dt_low = dbc[..., :dt_rank]
+    B_ = dbc[..., dt_rank:dt_rank + d_state].astype(jnp.float32)
+    C_ = dbc[..., dt_rank + d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (dt_low @ params["dt_proj"]).astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                          # [d_in, N]
+    u = xc.astype(jnp.float32)
+
+    if cache is None or S > 1:
+        Cn = min(cfg.mamba.chunk, S)
+        pad = (-S) % Cn
+        if pad:
+            u, B_, C_, dt = (jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+                             for t in (u, B_, C_, dt))
+        n_chunks = (S + pad) // Cn
+        def split(t):
+            return jnp.moveaxis(t.reshape(B, n_chunks, Cn, *t.shape[2:]), 1, 0)
+        h0 = jnp.zeros((B, d_in, d_state), jnp.float32) if cache is None \
+            else cache.ssm
+        h_last, ys = jax.lax.scan(lambda c, i: _ssm_chunk(c, i, A), h0,
+                                  (split(u), split(B_), split(C_), split(dt)))
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, (S + pad), d_in)[:, :S]
+        new_cache = None if cache is None else MambaCache(conv=conv_state,
+                                                          ssm=h_last)
+    else:
+        lam = jnp.exp(dt[:, 0, :, None] * A)
+        h = lam * cache.ssm + (dt * u)[:, 0, :, None] * B_[:, 0, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_[:, 0])[:, None]
+        new_cache = MambaCache(conv=conv_state, ssm=h)
+
+    y = y + u * params["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"], new_cache

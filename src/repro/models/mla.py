@@ -1,0 +1,161 @@
+"""DeepSeek Multi-head Latent Attention (V2/V3).
+
+Two decode paths:
+  * naive  — expand K/V from the latent cache every step (paper-faithful
+    baseline for the serving roofline).
+  * absorb — fold W_UK into the query and W_UV into the output projection so
+    decode scores directly against the [T, kv_lora + rope] latent cache.
+    This is the beyond-paper serving optimization exercised in §Perf.
+
+Cache stores only (c_kv [B,T,kv_lora], k_rope [B,T,qk_rope]) — the MLA memory
+win that makes deepseek decode shapes feasible.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.attention import blocked_attention, NEG_INF
+
+
+def mla_param_specs(cfg: cm.ArchConfig) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim
+    p = {}
+    if m.q_lora_rank:
+        p["wq_down"] = cm.spec((d, m.q_lora_rank), cfg.dtype)
+        p["q_ln_scale"] = cm.spec((m.q_lora_rank,), cfg.dtype)
+        p["wq_up"] = cm.spec((m.q_lora_rank, h * (qk + m.qk_rope_head_dim)), cfg.dtype)
+    else:
+        p["wq"] = cm.spec((d, h * (qk + m.qk_rope_head_dim)), cfg.dtype)
+    p["wkv_down"] = cm.spec((d, m.kv_lora_rank + m.qk_rope_head_dim), cfg.dtype)
+    p["kv_ln_scale"] = cm.spec((m.kv_lora_rank,), cfg.dtype)
+    p["wk_up"] = cm.spec((m.kv_lora_rank, h * qk), cfg.dtype)
+    p["wv_up"] = cm.spec((m.kv_lora_rank, h * m.v_head_dim), cfg.dtype)
+    p["wo"] = cm.spec((h * m.v_head_dim, d), cfg.dtype)
+    return p
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array       # [B, T, kv_lora]
+    k_rope: jax.Array     # [B, T, qk_rope]
+    length: jax.Array
+
+
+def mla_cache_specs(cfg: cm.ArchConfig, batch: int, max_len: int) -> MLACache:
+    m = cfg.mla
+    return MLACache(c_kv=cm.spec((batch, max_len, m.kv_lora_rank), cfg.dtype),
+                    k_rope=cm.spec((batch, max_len, m.qk_rope_head_dim), cfg.dtype),
+                    length=cm.spec((), jnp.int32))
+
+
+def init_mla_cache(cfg: cm.ArchConfig, batch: int, max_len: int) -> MLACache:
+    m = cfg.mla
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_len, m.kv_lora_rank), cfg.dtype),
+        k_rope=jnp.zeros((batch, max_len, m.qk_rope_head_dim), cfg.dtype),
+        length=jnp.zeros((), jnp.int32))
+
+
+def _queries(params, x, cfg, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    h, qk, qr = cfg.n_heads, m.qk_nope_head_dim, m.qk_rope_head_dim
+    if m.q_lora_rank:
+        cq = cm.rms_norm(x @ params["wq_down"], params["q_ln_scale"], cfg.norm_eps)
+        q = (cq @ params["wq_up"]).reshape(B, S, h, qk + qr)
+    else:
+        q = (x @ params["wq"]).reshape(B, S, h, qk + qr)
+    q_nope, q_rope = q[..., :qk], q[..., qk:]
+    q_rope = cm.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(params, x, cfg, positions):
+    m = cfg.mla
+    ckr = x @ params["wkv_down"]
+    c_kv = cm.rms_norm(ckr[..., :m.kv_lora_rank], params["kv_ln_scale"],
+                       cfg.norm_eps)
+    k_rope = ckr[..., m.kv_lora_rank:]
+    # shared (MQA-style) rope key: one head broadcast to all query heads
+    k_rope = cm.apply_rope(k_rope[:, :, None, :], positions,
+                           cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_mixer(params: dict, x: jax.Array, cfg: cm.ArchConfig, *,
+              positions: jax.Array, cache: MLACache | None = None):
+    """Prefill (cache None) or single-token decode. Returns (y, new_cache)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    h, qk, qr, dv = cfg.n_heads, m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    q_nope, q_rope = _queries(params, x, cfg, positions)
+    c_new, kr_new = _latents(params, x, cfg, positions)
+
+    if cache is None or S > 1:
+        # prefill: expand K/V, run blocked attention with per-head keys
+        k_nope = (c_new @ params["wk_up"]).reshape(B, S, h, qk)
+        v = (c_new @ params["wv_up"]).reshape(B, S, h, dv)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_new[:, :, None, :], (B, S, h, qr))],
+            axis=-1)
+        o = blocked_attention(q, k, v, causal=True, q_chunk=cfg.attn_chunk,
+                              prune=cfg.prune_tiles)
+        y = o.reshape(B, S, h * dv) @ params["wo"]
+        if cache is None:
+            return y, None
+        T = cache.c_kv.shape[1]
+        pad2 = ((0, 0), (0, T - S), (0, 0))
+        new_cache = MLACache(
+            c_kv=jnp.pad(c_new, pad2).astype(cache.c_kv.dtype),
+            k_rope=jnp.pad(kr_new, pad2).astype(cache.k_rope.dtype),
+            length=jnp.asarray(S, jnp.int32))
+        return y, new_cache
+
+    T = cache.c_kv.shape[1]
+    slot = jnp.minimum(cache.length, T - 1)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache.c_kv, c_new.astype(cache.c_kv.dtype), (0, slot, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache.k_rope, kr_new.astype(cache.k_rope.dtype), (0, slot, 0))
+    new_len = cache.length + 1
+    valid = jnp.arange(T) < new_len
+    scale = (qk + qr) ** -0.5
+
+    f32 = jnp.float32
+    if m.absorb:
+        # fold W_UK into q: q_lat[b,h,r] = sum_d q_nope[b,h,d] * W_UK[r, h, d]
+        wk = params["wk_up"].reshape(m.kv_lora_rank, h, qk)
+        q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], wk,
+                           preferred_element_type=f32).astype(c_kv.dtype)
+        s = (jnp.einsum("bhr,btr->bht", q_lat, c_kv,
+                        preferred_element_type=f32) +
+             jnp.einsum("bhd,btd->bht", q_rope[:, 0].astype(k_rope.dtype),
+                        k_rope, preferred_element_type=f32)) * scale
+        s = jnp.where(valid[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bht,btr->bhr", p.astype(c_kv.dtype), c_kv,
+                           preferred_element_type=f32)
+        wv = params["wv_up"].reshape(m.kv_lora_rank, h, dv)
+        o = jnp.einsum("bhr,rhd->bhd", o_lat.astype(wv.dtype), wv,
+                       preferred_element_type=f32)
+    else:
+        # naive: re-expand all K/V from latents every step
+        k_nope = (c_kv @ params["wk_up"]).reshape(B, T, h, qk)
+        v = (c_kv @ params["wv_up"]).reshape(B, T, h, dv)
+        s = (jnp.einsum("bhd,bthd->bht", q_nope[:, 0], k_nope,
+                        preferred_element_type=f32) +
+             jnp.einsum("bhd,btd->bht", q_rope[:, 0].astype(k_rope.dtype),
+                        k_rope, preferred_element_type=f32)) * scale
+        s = jnp.where(valid[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bht,bthd->bhd", p.astype(v.dtype), v,
+                       preferred_element_type=f32)
+
+    y = o.reshape(B, 1, h * dv).astype(x.dtype) @ params["wo"]
+    return y, MLACache(c_kv, k_rope, new_len)

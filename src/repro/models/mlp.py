@@ -1,0 +1,23 @@
+"""Dense gated-linear-unit MLPs (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+def mlp_param_specs(cfg: cm.ArchConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    return {
+        "wg": cm.spec((d, f), cfg.dtype),
+        "wu": cm.spec((d, f), cfg.dtype),
+        "wd": cm.spec((f, d), cfg.dtype),
+    }
+
+
+def mlp_apply(params: dict, x: jax.Array, cfg: cm.ArchConfig) -> jax.Array:
+    act = cm.act_fn(cfg.act)
+    h = act(x @ params["wg"]) * (x @ params["wu"])
+    return h @ params["wd"]

@@ -1,0 +1,127 @@
+"""Mixture-of-Experts FFN: shared + routed top-k experts.
+
+Dispatch is sort-based and capacity-bounded (MaxText/MegaBlocks-style) rather
+than GShard one-hot: a [T, E, C] dispatch tensor at DeepSeek scale (E=256,
+~1M tokens) is ~10^12 elements, so the classic dense-dispatch einsum is a
+non-starter.  Here each data-parallel group ranks its token-copies within
+their expert via argsort + segment arithmetic (O(T·k) memory), scatters them
+into an [E, C, d] buffer, runs batched expert GEMMs, and gathers back.
+
+Sharding intent (see distributed/sharding.py): token/group axes over
+("pod","data"); expert axis over "model" (16-way EP); the scatter into the
+expert buffer is where XLA inserts the all-to-all equivalent.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+def moe_param_specs(cfg: cm.ArchConfig) -> dict:
+    mo = cfg.moe
+    d, E, f = cfg.d_model, mo.n_experts, mo.d_ff_expert
+    p = {
+        "router": cm.spec((d, E), jnp.float32),
+        "we_g": cm.spec((E, d, f), cfg.dtype),
+        "we_u": cm.spec((E, d, f), cfg.dtype),
+        "we_d": cm.spec((E, f, d), cfg.dtype),
+    }
+    if mo.n_shared:
+        fs = mo.n_shared * f
+        p["ws_g"] = cm.spec((d, fs), cfg.dtype)
+        p["ws_u"] = cm.spec((d, fs), cfg.dtype)
+        p["ws_d"] = cm.spec((fs, d), cfg.dtype)
+    return p
+
+
+def expert_capacity(tokens_per_group: int, cfg: cm.ArchConfig) -> int:
+    mo = cfg.moe
+    c = math.ceil(tokens_per_group * mo.top_k * mo.capacity_factor / mo.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to multiple of 8
+
+
+class MoEStats(NamedTuple):
+    aux_loss: jax.Array       # Switch-style load-balance loss
+    dropped_frac: jax.Array   # fraction of token-copies over capacity
+
+
+def _route(params, x2d, cfg):
+    """x2d: [T, d] -> (weights [T,k], experts [T,k], probs [T,E])."""
+    mo = cfg.moe
+    logits = x2d.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, mo.top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return w, idx, probs
+
+
+def _group_dispatch(xg, wg_, idxg, params, cfg, C):
+    """One data-parallel group. xg: [Tg, d]; wg_/idxg: [Tg, k]."""
+    mo = cfg.moe
+    E, k = mo.n_experts, mo.top_k
+    Tg, d = xg.shape
+    Tk = Tg * k
+    flat_e = idxg.reshape(Tk)
+    order = jnp.argsort(flat_e)                      # stable sort by expert
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=E)          # [E]
+    starts = jnp.cumsum(counts) - counts
+    rank_sorted = jnp.arange(Tk, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    rank = jnp.zeros((Tk,), jnp.int32).at[order].set(rank_sorted)
+    keep = rank < C
+    slot = jnp.where(keep, flat_e * C + rank, E * C)  # E*C = drop slot
+    tok = jnp.repeat(jnp.arange(Tg, dtype=jnp.int32), k)
+    buf = jnp.zeros((E * C, d), xg.dtype).at[slot].set(xg[tok], mode="drop")
+    buf = buf.reshape(E, C, d)
+
+    act = cm.act_fn(cfg.act)
+    h = act(jnp.einsum("ecd,edf->ecf", buf, params["we_g"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, params["we_u"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["we_d"]).reshape(E * C, d)
+
+    gathered = out_buf.at[slot].get(mode="fill", fill_value=0)   # [Tk, d]
+    contrib = gathered * (wg_.reshape(Tk, 1) * keep[:, None]).astype(gathered.dtype)
+    y = jax.ops.segment_sum(contrib, tok, num_segments=Tg)
+    dropped = 1.0 - keep.mean()
+    return y, dropped
+
+
+def moe_apply(params: dict, x: jax.Array, cfg: cm.ArchConfig, *,
+              n_groups: int = 1):
+    """x: [B, S, d]. Returns (y, MoEStats). n_groups should divide B*S and
+    align with the data-parallel sharding (tokens stay group-local)."""
+    mo = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    x2d = x.reshape(T, d)
+    w, idx, probs = _route(params, x2d, cfg)
+
+    # Switch load-balance aux loss over the full batch
+    E = mo.n_experts
+    me = probs.mean(axis=0)                                      # [E]
+    onehot_top1 = jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32)
+    ce = onehot_top1.mean(axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    g = n_groups
+    while T % g:
+        g -= 1
+    Tg = T // g
+    C = expert_capacity(Tg, cfg)
+    xg = x2d.reshape(g, Tg, d)
+    wgk = w.reshape(g, Tg, mo.top_k)
+    idxg = idx.reshape(g, Tg, mo.top_k)
+    y, dropped = jax.vmap(
+        lambda a, b, c: _group_dispatch(a, b, c, params, cfg, C))(xg, wgk, idxg)
+    y = y.reshape(B, S, d)
+
+    if mo.n_shared:
+        act = cm.act_fn(cfg.act)
+        shared = act(x @ params["ws_g"]) * (x @ params["ws_u"])
+        y = y + shared @ params["ws_d"]
+    return y, MoEStats(aux_loss=aux, dropped_frac=dropped.mean())

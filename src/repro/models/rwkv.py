@@ -1,0 +1,192 @@
+"""RWKV-6 "Finch" time mixing + channel mixing (attention-free).
+
+TPU adaptation: the reference CUDA wkv6 kernel runs the per-head recurrence
+   S_t = diag(w_t) S_{t-1} + k_t^T v_t,   y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+one thread per channel.  Here it is re-expressed in the chunked linear-
+attention form (GLA-style): an outer ``lax.scan`` over time chunks carries the
+[h, dk, dv] state; within a chunk everything is matmuls with all decay
+exponents of the form exp(L_a - L_b), a >= b (cumulative log-decay L is
+non-increasing), so every exponent is <= 0 — numerically safe without the
+CUDA kernel's rescaling passes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+# token-shift targets for time mixing
+_TM_SLOTS = 5   # r, k, v, w, g
+
+
+def _dims(cfg: cm.ArchConfig):
+    rw = cfg.rwkv
+    n_heads = cfg.d_model // rw.head_dim
+    return n_heads, rw.head_dim
+
+
+def rwkv_tm_param_specs(cfg: cm.ArchConfig) -> dict:
+    d = cfg.d_model
+    rw = cfg.rwkv
+    h, dh = _dims(cfg)
+    return {
+        "mix_base/mix_mu": cm.spec((d,), jnp.float32),
+        "mix/mix_mu": cm.spec((_TM_SLOTS, d), jnp.float32),
+        "mix_w1": cm.spec((d, _TM_SLOTS * rw.mix_lora), cfg.dtype),
+        "mix_w2": cm.spec((_TM_SLOTS, rw.mix_lora, d), cfg.dtype),
+        "wr": cm.spec((d, d), cfg.dtype),
+        "wk": cm.spec((d, d), cfg.dtype),
+        "wv": cm.spec((d, d), cfg.dtype),
+        "wg": cm.spec((d, d), cfg.dtype),
+        "decay_base": cm.spec((d,), jnp.float32),
+        "decay_w1": cm.spec((d, rw.decay_lora), cfg.dtype),
+        "decay_w2": cm.spec((rw.decay_lora, d), cfg.dtype),
+        "bonus_u": cm.spec((h, dh), jnp.float32),
+        "ln_x_scale": cm.spec((d,), cfg.dtype),
+        "wo": cm.spec((d, d), cfg.dtype),
+    }
+
+
+def rwkv_cm_param_specs(cfg: cm.ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "cmix_k/mix_mu": cm.spec((d,), jnp.float32),
+        "cmix_r/mix_mu": cm.spec((d,), jnp.float32),
+        "wk": cm.spec((d, f), cfg.dtype),
+        "wv": cm.spec((f, d), cfg.dtype),
+        "wr": cm.spec((d, d), cfg.dtype),
+    }
+
+
+class RWKVCache(NamedTuple):
+    tm_prev: jax.Array    # [B, d] last input to time mixing
+    cm_prev: jax.Array    # [B, d] last input to channel mixing
+    state: jax.Array      # [B, h, dk, dv] fp32 wkv state
+
+
+def rwkv_cache_specs(cfg: cm.ArchConfig, batch: int) -> RWKVCache:
+    d = cfg.d_model
+    h, dh = _dims(cfg)
+    return RWKVCache(tm_prev=cm.spec((batch, d), cfg.dtype),
+                     cm_prev=cm.spec((batch, d), cfg.dtype),
+                     state=cm.spec((batch, h, dh, dh), jnp.float32))
+
+
+def init_rwkv_cache(cfg: cm.ArchConfig, batch: int) -> RWKVCache:
+    d = cfg.d_model
+    h, dh = _dims(cfg)
+    return RWKVCache(tm_prev=jnp.zeros((batch, d), cfg.dtype),
+                     cm_prev=jnp.zeros((batch, d), cfg.dtype),
+                     state=jnp.zeros((batch, h, dh, dh), jnp.float32))
+
+
+def _token_shift(x, prev):
+    """returns x_{t-1} sequence given carried prev: [B,S,d], [B,d]."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _ddlerp(params, x, x_prev):
+    """Data-dependent token-shift interpolation -> per-slot mixed inputs."""
+    xx = x_prev - x
+    base = x + xx * params["mix_base/mix_mu"].astype(x.dtype)
+    lora = jnp.tanh(base @ params["mix_w1"])
+    B, S, _ = x.shape
+    lora = lora.reshape(B, S, _TM_SLOTS, -1)
+    offs = jnp.einsum("bsli,lid->bsld", lora, params["mix_w2"])
+    mus = params["mix/mix_mu"].astype(x.dtype)[None, None] + offs
+    return x[:, :, None] + xx[:, :, None] * mus          # [B,S,5,d]
+
+
+def _wkv_chunk(carry, inp):
+    """One chunk of the wkv recurrence. carry S: [B,h,dk,dv] fp32.
+    inp r,k,v: [B,C,h,dh]; lw: [B,C,h,dh] log-decay (<=0); u: [h,dh]."""
+    S = carry
+    r, k, v, lw, u = inp
+    L = jnp.cumsum(lw, axis=1)                            # [B,C,h,dk]
+    # intra-chunk: A[t,j] = sum_i r[t,i] k[j,i] exp(L[t-1,i] - L[j,i]), j < t.
+    # All exponents are differences L_a - L_b with a >= b, hence <= 0: safe.
+    r_s = r * jnp.exp(L - lw)                             # r_t exp(L_{t-1})
+    Lm1 = L - lw
+    # diff[t,j,i] = Lm1[t,i] - L[j,i]  (<= 0 for j <= t-1)
+    diff = Lm1[:, :, None] - L[:, None]                  # [B,C,C,h,dk]
+    C_ = r.shape[1]
+    causal = jnp.tril(jnp.ones((C_, C_), bool), k=-1)
+    diff = jnp.where(causal[None, :, :, None, None], diff, -jnp.inf)
+    scores = jnp.einsum("bthi,bjhi,btjhi->bhtj", r, k, jnp.exp(diff))
+    y = jnp.einsum("bhtj,bjhd->bthd", scores, v)
+    # bonus (current token, diagonal u term)
+    y += jnp.einsum("bthi,hi,bthi,bthd->bthd", r, u, k, v)
+    # inter-chunk: r_t exp(L_{t-1}) @ S_0
+    y += jnp.einsum("bthi,bhid->bthd", r_s, S)
+    # state update: S_C = exp(L_C) S_0 + sum_j (k_j exp(L_C - L_j)) v_j
+    LC = L[:, -1]                                         # [B,h,dk]
+    S_new = jnp.exp(LC)[..., None] * S + jnp.einsum(
+        "bjhi,bjhd->bhid", k * jnp.exp(LC[:, None] - L), v)
+    return S_new, y
+
+
+def rwkv_time_mix(params: dict, x: jax.Array, cfg: cm.ArchConfig, *,
+                  cache: RWKVCache | None = None):
+    B, S, d = x.shape
+    h, dh = _dims(cfg)
+    prev = cache.tm_prev if cache is not None else jnp.zeros((B, d), x.dtype)
+    x_prev = _token_shift(x, prev)
+    xm = _ddlerp(params, x, x_prev)                      # [B,S,5,d]
+    xr, xk, xv, xw, xg = (xm[:, :, i] for i in range(_TM_SLOTS))
+    r = (xr @ params["wr"]).reshape(B, S, h, dh).astype(jnp.float32)
+    k = (xk @ params["wk"]).reshape(B, S, h, dh).astype(jnp.float32)
+    v = (xv @ params["wv"]).reshape(B, S, h, dh).astype(jnp.float32)
+    g = jax.nn.silu(xg @ params["wg"])
+    dec = params["decay_base"] + (
+        jnp.tanh(xw @ params["decay_w1"]) @ params["decay_w2"]).astype(jnp.float32)
+    lw = -jnp.exp(dec).reshape(B, S, h, dh)              # log-decay, < 0
+    u = params["bonus_u"]
+
+    if cache is None or S > 1:
+        Cn = min(cfg.rwkv.chunk, S)
+        pad = (-S) % Cn
+        if pad:
+            r, k, v, lw = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                           for t in (r, k, v, lw))
+        n_chunks = (S + pad) // Cn
+        def split(t):
+            return jnp.moveaxis(t.reshape(B, n_chunks, Cn, h, dh), 1, 0)
+        S0 = jnp.zeros((B, h, dh, dh), jnp.float32) if cache is None \
+            else cache.state
+        S_last, ys = jax.lax.scan(
+            lambda c, i: _wkv_chunk(c, (*i, u)), S0,
+            (split(r), split(k), split(v), split(lw)))
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, S + pad, h, dh)[:, :S]
+        new_state, new_prev = S_last, x[:, -1]
+    else:
+        S0 = cache.state
+        y = jnp.einsum("bhi,hi,bhi,bhd->bhd", r[:, 0], u, k[:, 0], v[:, 0])
+        y += jnp.einsum("bhi,bhid->bhd", r[:, 0], S0)
+        y = y[:, None]
+        new_state = jnp.exp(lw[:, 0])[..., None] * S0 + \
+            jnp.einsum("bhi,bhd->bhid", k[:, 0], v[:, 0])
+        new_prev = x[:, 0]
+
+    # per-head normalization (stands in for the reference GroupNorm ln_x)
+    y = y.reshape(B, -1, h, dh)
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), axis=-1, keepdims=True) + 1e-5)
+    y = y.reshape(B, -1, d).astype(x.dtype)
+    y = y * (1.0 + params["ln_x_scale"]) * g
+    out = y @ params["wo"]
+    return out, (new_state, new_prev)
+
+
+def rwkv_channel_mix(params: dict, x: jax.Array, cfg: cm.ArchConfig, *,
+                     cache: RWKVCache | None = None):
+    B, S, d = x.shape
+    prev = cache.cm_prev if cache is not None else jnp.zeros((B, d), x.dtype)
+    x_prev = _token_shift(x, prev)
+    xx = x_prev - x
+    xk = x + xx * params["cmix_k/mix_mu"].astype(x.dtype)
+    xr = x + xx * params["cmix_r/mix_mu"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ params["wk"]))
+    kv = k @ params["wv"]
+    return jax.nn.sigmoid(xr @ params["wr"]) * kv, x[:, -1]

@@ -1,0 +1,89 @@
+"""Serving substrate: continuous batching + straggler mitigation.
+
+The SemanticXR server multiplexes perception/caption/query work from many
+XR clients.  Requests join a waiting queue; each engine step assembles a
+fixed-size batch from running + waiting requests (continuous batching — a
+finished request's slot is refilled next step, no batch drain).  Straggler
+mitigation: a request whose assigned worker misses its deadline is hedged —
+re-enqueued at the front for the next step; first completion wins, the
+duplicate is cancelled (idempotent by request id).
+"""
+from __future__ import annotations
+
+import heapq
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+
+@dataclass(order=True)
+class Request:
+    priority: float
+    rid: int = field(compare=False)
+    payload: Any = field(compare=False)
+    enqueued_at: float = field(compare=False, default=0.0)
+    deadline_ms: float = field(compare=False, default=100.0)
+    started_at: float = field(compare=False, default=0.0)
+    hedged: bool = field(compare=False, default=False)
+
+
+@dataclass
+class BatchScheduler:
+    batch_size: int
+    step_fn: Callable[[list], list]       # batch of payloads -> results
+    hedge_after_ms: float = 50.0
+    waiting: list = field(default_factory=list)   # heap by priority
+    running: dict = field(default_factory=dict)   # rid -> Request
+    done: dict = field(default_factory=dict)      # rid -> result
+    hedge_count: int = 0
+    _next_rid: int = 0
+
+    def submit(self, payload, *, priority: float = 1.0,
+               deadline_ms: float = 100.0) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        heapq.heappush(self.waiting, Request(
+            priority=-priority, rid=rid, payload=payload,
+            enqueued_at=time.perf_counter(), deadline_ms=deadline_ms))
+        return rid
+
+    def _hedge_stragglers(self, now):
+        for rid, req in list(self.running.items()):
+            if (now - req.started_at) * 1e3 > self.hedge_after_ms \
+                    and not req.hedged:
+                req.hedged = True
+                self.hedge_count += 1
+                heapq.heappush(self.waiting, Request(
+                    priority=-1e9, rid=rid, payload=req.payload,
+                    enqueued_at=now, deadline_ms=req.deadline_ms))
+
+    def step(self) -> dict:
+        """One engine iteration: fill the batch, run, retire completions."""
+        now = time.perf_counter()
+        self._hedge_stragglers(now)
+        batch = []
+        while self.waiting and len(batch) < self.batch_size:
+            req = heapq.heappop(self.waiting)
+            if req.rid in self.done:      # hedged duplicate already served
+                continue
+            req.started_at = now
+            self.running[req.rid] = req
+            batch.append(req)
+        if not batch:
+            return {}
+        results = self.step_fn([r.payload for r in batch])
+        out = {}
+        for req, res in zip(batch, results):
+            if req.rid not in self.done:  # first completion wins
+                self.done[req.rid] = res
+                out[req.rid] = res
+            self.running.pop(req.rid, None)
+        return out
+
+    def drain(self, max_steps: int = 10_000) -> dict:
+        for _ in range(max_steps):
+            if not self.waiting and not self.running:
+                break
+            self.step()
+        return self.done

@@ -1,0 +1,38 @@
+"""Knob autotuner: budget satisfaction + quality-maximality + adaptation."""
+import dataclasses
+
+from repro.core.autotune import DownstreamTuner, tune_upstream
+from repro.core.depth import upstream_mbps
+from repro.core.knobs import Knobs
+
+
+def test_upstream_budget_met_quality_first():
+    kn = Knobs()
+    for budget in (30.0, 10.0, 5.0, 2.5):
+        tuned = tune_upstream(kn, budget_mbps=budget)
+        assert upstream_mbps(720, 1280, tuned) <= budget + 1e-6
+        # quality-maximal: one step finer would bust the budget (or ratio=1)
+        r = tuned.depth_downsampling_ratio
+        if r > 1:
+            finer = dataclasses.replace(tuned, depth_downsampling_ratio=r - 1)
+            assert upstream_mbps(720, 1280, finer) > budget
+
+
+def test_upstream_monotone_in_budget():
+    kn = Knobs()
+    rs = [tune_upstream(kn, budget_mbps=b).depth_downsampling_ratio
+          for b in (30.0, 10.0, 5.0, 2.5)]
+    assert rs == sorted(rs)
+
+
+def test_downstream_backs_off_and_recovers():
+    kn = Knobs(local_map_update_frequency=2)
+    t = DownstreamTuner(budget_bytes_per_s=10_000)
+    # heavy updates -> interval grows (frequency drops)
+    for _ in range(4):
+        kn = t.observe(kn, packet_bytes=50_000)
+    assert kn.local_map_update_frequency > 2
+    # quiet scene -> interval shrinks back toward the floor
+    for _ in range(10):
+        kn = t.observe(kn, packet_bytes=100)
+    assert kn.local_map_update_frequency <= 2

@@ -1,0 +1,108 @@
+"""Property-based tests (hypothesis) on SemanticXR system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import geometry as geo
+from repro.core.knobs import Knobs
+from repro.core.local_map import (LocalMap, ObjectUpdate, apply_update,
+                                  init_local_map, local_map_nbytes)
+
+KN = Knobs(client_capacity=8, max_object_points_client=16)
+EDIM = 8
+
+
+def _mk_update(oid, pri_seed, version=1):
+    rng = np.random.default_rng(oid * 31 + version)
+    e = rng.normal(size=(EDIM,)).astype(np.float32)
+    e /= np.linalg.norm(e)
+    return ObjectUpdate(
+        oid=jnp.asarray(oid, jnp.int32), embed=jnp.asarray(e),
+        label=jnp.asarray(oid % 5, jnp.int32),
+        points=jnp.zeros((16, 3), jnp.float16),
+        n_points=jnp.asarray(4, jnp.int32),
+        centroid=jnp.zeros((3,), jnp.float32),
+        version=jnp.asarray(version, jnp.int32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 30), st.floats(0.0, 10.0)),
+                min_size=1, max_size=40))
+def test_local_map_memory_bound(updates):
+    """Device memory NEVER grows with scene size: fixed buffers, active count
+    <= capacity, nbytes constant (paper Sec. 3.2 / Fig. 5)."""
+    m = init_local_map(KN, EDIM)
+    base = local_map_nbytes(m)
+    for oid, pri in updates:
+        m = apply_update(m, _mk_update(oid, pri), jnp.asarray(pri))
+        assert int(m.active.sum()) <= KN.client_capacity
+        assert local_map_nbytes(m) == base
+
+
+@settings(max_examples=15, deadline=None, derandomize=True)
+@given(st.lists(st.tuples(st.integers(1, 50), st.floats(0.0, 1.0)),
+                min_size=10, max_size=30))
+def test_eviction_removes_lowest_priority(updates):
+    """Paper Sec. 3.2: when the map is full, admitting a higher-priority
+    update evicts the lowest-priority retained object; lower-priority
+    arrivals are rejected."""
+    m = init_local_map(KN, EDIM)
+    for oid, pri in updates:
+        act_b = np.asarray(m.active)
+        ids_b = set(np.asarray(m.ids)[act_b].tolist())
+        pris_b = np.asarray(m.priority)[act_b]
+        was_full = act_b.sum() == KN.client_capacity
+        m = apply_update(m, _mk_update(oid, pri), jnp.asarray(pri))
+        act_a = np.asarray(m.active)
+        ids_a = set(np.asarray(m.ids)[act_a].tolist())
+        gone = ids_b - ids_a
+        if gone:                        # an eviction happened
+            assert was_full and oid not in ids_b
+            assert len(gone) == 1
+            assert pri > pris_b.min() - 1e-6
+        elif was_full and oid not in ids_b:   # rejected newcomer
+            assert pri <= pris_b.min() + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 64))
+def test_downsample_bounds_and_subset(n, budget):
+    """Downsampled cloud: n_out <= budget, every output point is an input
+    point (gather, no interpolation), deterministic."""
+    rng = np.random.default_rng(n * budget)
+    P = 256
+    pts = jnp.asarray(rng.normal(size=(P, 3)).astype(np.float32))
+    out, n_out = geo.downsample(pts, jnp.asarray(min(n, P)), budget)
+    out2, n_out2 = geo.downsample(pts, jnp.asarray(min(n, P)), budget)
+    assert int(n_out) <= budget
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+    src = set(map(tuple, np.asarray(pts)[:min(n, P)].round(5)))
+    got = np.asarray(out)[:int(n_out)].round(5)
+    assert all(tuple(p) in src for p in got)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 19), st.integers(2, 7))
+def test_update_version_monotone(oid, version):
+    """Re-applying an update with the same id refreshes in place (no
+    duplicate entries), and the stored version tracks the server's."""
+    m = init_local_map(KN, EDIM)
+    m = apply_update(m, _mk_update(oid + 1, 0.5, 1), jnp.asarray(0.5))
+    m = apply_update(m, _mk_update(oid + 1, 0.5, version), jnp.asarray(0.5))
+    act = np.asarray(m.active)
+    ids = np.asarray(m.ids)[act]
+    assert (ids == oid + 1).sum() == 1
+    vstored = np.asarray(m.version)[act][ids == oid + 1][0]
+    assert vstored == version
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 30), st.integers(2, 30))
+def test_bbox_area_bounds(h, w):
+    rng = np.random.default_rng(h * w)
+    mask = jnp.asarray(rng.random((h, w)) > 0.7)
+    area = int(geo.bbox_pixel_area(mask))
+    npx = int(np.asarray(mask).sum())
+    assert area >= npx
+    assert area <= h * w

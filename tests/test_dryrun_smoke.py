@@ -1,0 +1,22 @@
+"""Dry-run smoke: one cheap cell must lower+compile on the 512-device
+production mesh.  Runs in a subprocess because the forced device count must
+not leak into this test session's jax runtime."""
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def test_dryrun_cell_compiles(tmp_path):
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "whisper-small", "--shape", "decode_32k",
+         "--out", str(tmp_path)],
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root"},
+        capture_output=True, text=True, timeout=420)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "dry-run complete" in proc.stdout
+    recs = list((tmp_path / "pod1").glob("*.json"))
+    assert len(recs) == 1

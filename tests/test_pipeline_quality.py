@@ -1,0 +1,52 @@
+"""End-to-end mapping pipeline: quality parity across execution modes and
+the depth co-design gate (small-scale versions of Fig. 3 / Tab. 5)."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import jax
+import numpy as np
+import pytest
+
+from benchmarks.common import build_map, default_knobs, semantic_quality
+
+
+@pytest.fixture(scope="module")
+def maps():
+    out = {}
+    for mode in ("baseline", "semanticxr"):
+        srv, emb, scene, times = build_map(mode=mode, n_objects=20,
+                                           frames=40, h=120, w=160)
+        out[mode] = (srv, emb, scene, times)
+    return out
+
+
+def test_quality_equivalent_across_modes(maps):
+    """Object-level organization must not cost semantic quality (Tab. 4)."""
+    qb = semantic_quality(*maps["baseline"][:3])
+    qs = semantic_quality(*maps["semanticxr"][:3])
+    assert qs["mAcc"] >= qb["mAcc"] - 10.0
+    assert qs["F-mIoU"] >= qb["F-mIoU"] - 5.0
+    assert qs["mAcc"] >= 80.0
+
+
+def test_object_level_is_faster(maps):
+    """B+P+SD steady-state per-frame latency < baseline (Fig. 3)."""
+    tb = [t.total_ms for t in maps["baseline"][3][2:]]
+    ts = [t.total_ms for t in maps["semanticxr"][3][2:]]
+    assert np.mean(ts) < np.mean(tb)
+
+
+def test_geometry_capped_at_budget(maps):
+    srv = maps["semanticxr"][0]
+    n = np.asarray(srv.store.n_points)[np.asarray(srv.store.active)]
+    assert (n <= srv.knobs.max_object_points_server).all()
+
+
+def test_deferral_gate_reduces_detections():
+    kn_gate = default_knobs(depth_downsampling_ratio=5,
+                            min_mapping_bbox_area=4000)
+    srv, _, _, _ = build_map(knobs=kn_gate, n_objects=20, frames=30,
+                             h=120, w=160)
+    assert srv.deferred > 0

@@ -1,0 +1,85 @@
+"""Serving substrate: continuous batching, straggler hedging, grad
+compression."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import collectives as coll
+from repro.serving.batching import BatchScheduler
+
+
+def test_continuous_batching_serves_all():
+    calls = []
+
+    def step_fn(payloads):
+        calls.append(len(payloads))
+        return [p * 2 for p in payloads]
+
+    s = BatchScheduler(batch_size=4, step_fn=step_fn)
+    rids = [s.submit(i) for i in range(10)]
+    done = s.drain()
+    assert len(done) == 10
+    assert all(done[r] == i * 2 for i, r in enumerate(rids))
+    assert max(calls) <= 4
+
+
+def test_priority_order():
+    order = []
+
+    def step_fn(payloads):
+        order.extend(payloads)
+        return payloads
+
+    s = BatchScheduler(batch_size=1, step_fn=step_fn)
+    s.submit("low", priority=0.1)
+    s.submit("high", priority=9.0)
+    s.submit("mid", priority=1.0)
+    s.drain()
+    assert order == ["high", "mid", "low"]
+
+
+def test_straggler_hedging():
+    """A request stuck in `running` past the hedge deadline is re-dispatched;
+    first completion wins and the duplicate is dropped."""
+    def step_fn(payloads):
+        return [p for p in payloads]
+
+    s = BatchScheduler(batch_size=2, step_fn=step_fn, hedge_after_ms=0.0)
+    rid = s.submit("x")
+    # simulate a worker that claimed the request but never finished
+    import heapq
+    from repro.serving.batching import Request
+    req = Request(priority=-1.0, rid=rid, payload="x",
+                  started_at=time.perf_counter() - 1.0)
+    s.running[rid] = req
+    s.waiting.clear()
+    out = s.step()           # hedge fires, re-enqueues, completes
+    assert s.hedge_count == 1
+    assert s.done[rid] == "x"
+
+
+def test_grad_compression_error_feedback():
+    """int8+EF: single-step error is bounded; residual carries it so the
+    RUNNING SUM of dequantized grads tracks the true sum (convergence
+    property of error feedback)."""
+    key = jax.random.key(0)
+    grads = {"w": jax.random.normal(key, (256, 64)) * 0.01}
+    ef = coll.init_ef(grads)
+    true_sum = jnp.zeros_like(grads["w"])
+    deq_sum = jnp.zeros_like(grads["w"])
+    for i in range(8):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, i),
+                                    (256, 64)) * 0.01}
+        deq, ef = coll.compress_grads_ef(g, ef)
+        true_sum = true_sum + g["w"]
+        deq_sum = deq_sum + deq["w"]
+    # cumulative tracking error == current residual (telescoping), which is
+    # bounded by one quantization step
+    resid = jax.tree.leaves(ef.residual)[0]
+    np.testing.assert_allclose(np.asarray(true_sum - deq_sum),
+                               np.asarray(resid), rtol=1e-4, atol=1e-6)
+    assert float(jnp.abs(resid).max()) < 0.01
+    # wire size: int8 is ~4x smaller than fp32
+    assert coll.compressed_bytes(grads) < 0.26 * 4 * grads["w"].size

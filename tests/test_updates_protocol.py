@@ -1,0 +1,110 @@
+"""Incremental-update protocol invariants + end-to-end device/cloud session."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Knobs, MappingServer
+from repro.core.query import query_local, query_server
+from repro.core.runtime import CloudService, DeviceClient, NetworkModel, choose_mode
+from repro.core.updates import collect_updates, init_sync
+from repro.data.scenes import make_scene, scene_stream
+from repro.perception.embedder import OracleEmbedder
+
+KN = Knobs(server_capacity=128, client_capacity=64,
+           max_object_points_server=256, max_object_points_client=64,
+           max_detections_per_frame=16, min_obs_before_sync=1)
+
+
+def _mapped_server(n_objects=15, frames=40):
+    scene = make_scene(n_objects=n_objects, seed=3)
+    classes = {o.oid: o.class_id for o in scene.objects}
+    emb = OracleEmbedder(embed_dim=64)
+    srv = MappingServer(knobs=KN, embedder=emb, mode="semanticxr")
+    key = jax.random.key(0)
+    for i, fr in enumerate(scene_stream(scene, n_frames=frames,
+                                        keyframe_interval=5, h=60, w=80)):
+        srv.process_frame(fr, classes, jax.random.fold_in(key, i))
+    return srv, emb, scene
+
+
+def test_incremental_matches_full_sync():
+    """Applying incremental packets == applying one full-map packet
+    (same retained objects), and repeat ticks with no changes send 0 bytes."""
+    srv, emb, _ = _mapped_server()
+    sync = init_sync(KN.server_capacity)
+    pkt1, sync = collect_updates(srv.store, sync, KN, tick=0)
+    assert pkt1.nbytes > 0
+    # no changes since -> empty incremental
+    pkt2, sync = collect_updates(srv.store, sync, KN, tick=1)
+    assert pkt2.nbytes == 0 and len(pkt2.updates) == 0
+    # full map == first incremental from empty sync state
+    pkt_full, _ = collect_updates(srv.store, init_sync(KN.server_capacity),
+                                  KN, tick=0, full_map=True)
+    assert {int(u.oid) for u in pkt_full.updates} == \
+        {int(u.oid) for u in pkt1.updates}
+
+
+def test_downstream_bytes_proportional_to_changes():
+    """Fig. 6: incremental bytes track changed objects; the full-map baseline
+    tracks total scene size."""
+    srv, emb, scene = _mapped_server(n_objects=25, frames=60)
+    sync = init_sync(KN.server_capacity)
+    pkt, sync = collect_updates(srv.store, sync, KN, tick=0)
+    n_active = int(np.asarray(srv.store.active.sum()))
+    full, _ = collect_updates(srv.store, init_sync(KN.server_capacity), KN,
+                              tick=0, full_map=True)
+    assert len(full.updates) == n_active
+    # second incremental after NO new frames is empty; full stays O(scene)
+    pkt2, _ = collect_updates(srv.store, sync, KN, tick=1)
+    full2, _ = collect_updates(srv.store, init_sync(KN.server_capacity), KN,
+                               tick=1, full_map=True)
+    assert pkt2.nbytes == 0
+    assert full2.nbytes == full.nbytes
+
+
+def test_query_under_network_drop():
+    """LQ answers during outage; SQ/LQ switch follows the latency threshold;
+    buffered updates apply on reconnect."""
+    srv, emb, scene = _mapped_server()
+    cloud = CloudService(knobs=KN, store_ref=srv)
+    dev = DeviceClient(knobs=KN, embed_dim=64)
+    net = NetworkModel(rtt_ms=20.0, outages=((10.0, 20.0),))
+
+    # t=0: up -> SQ mode; ship updates
+    assert choose_mode(net, 0.0, KN) == "SQ"
+    pkt = cloud.update_tick(network_up=net.is_up(0.0))
+    dev.ingest(pkt, user_pos=jnp.zeros(3))
+    n_before = int(dev.local.active.sum())
+    assert n_before > 0
+
+    # t=15: outage -> LQ; local queries still answer
+    assert not net.is_up(15.0)
+    assert choose_mode(net, 15.0, KN) == "LQ"
+    labels = np.asarray(srv.store.label)[np.asarray(srv.store.active)]
+    cid = int(labels[0])                   # a class known to be mapped
+    res = dev.query(emb.embed_text(cid))
+    assert float(res.scores[0]) > 0.5
+
+    # during outage the tick is buffered, not delivered
+    pkt_out = cloud.update_tick(network_up=False)
+    assert pkt_out is None and len(cloud.buffered) == 1
+
+    # reconnect: flush applies pending state
+    pkt3 = cloud.flush_buffer()
+    dev.ingest(pkt3, user_pos=jnp.zeros(3))
+    assert len(cloud.buffered) == 0
+
+
+def test_sq_lq_agree_on_top1():
+    """With capacity for the full scene, local and server queries agree."""
+    srv, emb, scene = _mapped_server()
+    cloud = CloudService(knobs=KN, store_ref=srv)
+    dev = DeviceClient(knobs=KN, embed_dim=64)
+    pkt = cloud.update_tick(network_up=True)
+    dev.ingest(pkt, user_pos=jnp.zeros(3))
+    labels = np.asarray(srv.store.label)
+    ids = np.asarray(srv.store.ids)
+    for cid in set(labels[np.asarray(srv.store.active)]):
+        sq = cloud.query(emb.embed_text(int(cid)))
+        lq = dev.query(emb.embed_text(int(cid)))
+        assert int(sq.oids[0]) == int(lq.oids[0])
