@@ -1,0 +1,126 @@
+"""Ingest / sync-tick microbenchmark (new in the batched-hot-paths PR).
+
+Measures one full downstream sync tick at steady state:
+  collect   server packet build — SoA UpdateBatch via one jitted
+            gather+vmapped-downsample (seed: per-object Python loop).
+  ingest    device side — one jitted apply_updates_batch + batched
+            compute_priority (seed: per-object apply_update dispatches).
+
+Both seed baselines run at identical shapes/knobs so the speedup is measured
+against the real thing, not asserted: the seed collect loop (per-object
+downsample/centroid dispatches) is reconstructed inline, and the seed ingest
+path survives as DeviceClient.ingest_sequential.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import build_map, csv_row, default_knobs, EDIM
+from repro.core.runtime import CloudService, DeviceClient
+from repro.core.updates import collect_updates, init_sync
+
+
+def _time(fn, *, reps: int, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
+def run(full: bool = False):
+    n_objects, frames = (80, 100) if full else (40, 60)
+    reps = 20 if full else 10
+    kn = default_knobs()
+    srv, emb, scene, _ = build_map(n_objects=n_objects, frames=frames,
+                                   knobs=kn)
+    n_act = int(np.asarray(srv.store.active).sum())
+    user_pos = jnp.zeros(3)
+
+    # --- collect: full-map tick (worst case: every active object ships)
+    def collect_once():
+        pkt, _ = collect_updates(srv.store, init_sync(kn.server_capacity),
+                                 kn, tick=0, full_map=True)
+        jax.block_until_ready(pkt.batch.n_points)
+        return pkt
+
+    collect_ms = _time(collect_once, reps=reps)
+    pkt = collect_once()
+
+    # seed collect path, reconstructed: per-object downsample + centroid
+    # dispatches in a Python loop (the loop collect_updates used to run)
+    from repro.core import geometry as geo
+    from repro.core.local_map import ObjectUpdate
+    from repro.core.updates import update_nbytes
+
+    def collect_seed():
+        active = np.nonzero(np.asarray(srv.store.active))[0]
+        Pc = kn.max_object_points_client
+        updates, nbytes = [], 0
+        for i in active:
+            pts, n = geo.downsample(srv.store.points[i],
+                                    srv.store.n_points[i], Pc)
+            c, _, _ = geo.centroid_bbox(pts, n)
+            updates.append(ObjectUpdate(
+                oid=srv.store.ids[i], embed=srv.store.embed[i],
+                label=srv.store.label[i], points=pts.astype(jnp.float16),
+                n_points=n, centroid=c, version=srv.store.version[i]))
+            nbytes += update_nbytes(srv.store.embed.shape[1], int(n))
+        jax.block_until_ready(updates[-1].points)
+        return updates, nbytes
+
+    collect_seed_ms = _time(collect_seed, reps=max(reps // 2, 3))
+    _, seed_nbytes = collect_seed()
+    assert seed_nbytes == pkt.nbytes, (seed_nbytes, pkt.nbytes)
+
+    # --- ingest: batched (one dispatch) vs seed sequential loop
+    dev = DeviceClient(knobs=kn, embed_dim=EDIM)
+
+    def ingest_batched():
+        dev.local = dev.local._replace(active=jnp.zeros_like(dev.local.active))
+        dev.ingest(pkt, user_pos=user_pos)
+        jax.block_until_ready(dev.local.active)
+
+    dev_seq = DeviceClient(knobs=kn, embed_dim=EDIM)
+
+    def ingest_sequential():
+        dev_seq.local = dev_seq.local._replace(
+            active=jnp.zeros_like(dev_seq.local.active))
+        dev_seq.ingest_sequential(pkt, user_pos=user_pos)
+        jax.block_until_ready(dev_seq.local.active)
+
+    batched_ms = _time(ingest_batched, reps=reps)
+    seq_ms = _time(ingest_sequential, reps=reps)
+    speedup = seq_ms / max(batched_ms, 1e-9)
+
+    collect_speedup = collect_seed_ms / max(collect_ms, 1e-9)
+    csv_row("ingest_tick_collect", collect_ms * 1e3,
+            f"objects={pkt.count};bytes={pkt.nbytes};"
+            f"seed_loop={collect_seed_ms:.2f}ms;"
+            f"speedup={collect_speedup:.2f}x")
+    csv_row("ingest_tick_apply[batched]", batched_ms * 1e3,
+            f"objects={pkt.count};dispatches=1")
+    csv_row("ingest_tick_apply[sequential_seed]", seq_ms * 1e3,
+            f"objects={pkt.count};dispatches={pkt.count}")
+    csv_row("ingest_tick_speedup", batched_ms * 1e3,
+            f"speedup={speedup:.2f}x;target>=2x")
+    return {
+        "n_active": n_act,
+        "packet_objects": pkt.count,
+        "packet_bytes": pkt.nbytes,
+        "collect_ms": collect_ms,
+        "collect_seed_loop_ms": collect_seed_ms,
+        "collect_speedup": collect_speedup,
+        "ingest_batched_ms": batched_ms,
+        "ingest_sequential_ms": seq_ms,
+        "speedup": speedup,
+    }
+
+
+if __name__ == "__main__":
+    run()

@@ -1,15 +1,20 @@
 """Benchmark harness: one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV rows (see each module's docstring
-for the paper artifact it reproduces)."""
+for the paper artifact it reproduces).  ``--json`` additionally writes
+``BENCH_<suite>.json`` at the repo root so the perf trajectory is tracked
+across PRs (see EXPERIMENTS.md)."""
 import argparse
+import json
 import sys
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))
 
-from benchmarks import (downstream_bw, local_map_scale, mapping_latency,
-                        power_model, query_latency, roofline, upstream_bw)
+from benchmarks import (downstream_bw, ingest_tick, local_map_scale,
+                        mapping_latency, power_model, query_latency, roofline,
+                        upstream_bw)
 
 SUITES = {
     "tab4_fig3_mapping": mapping_latency.run,
@@ -19,7 +24,27 @@ SUITES = {
     "tab5_upstream": upstream_bw.run,
     "fig7_power": power_model.run,
     "roofline": roofline.run,
+    "ingest_tick": ingest_tick.run,
 }
+
+
+def _jsonable(obj):
+    """Coerce suite return values (numpy scalars/arrays, dataclasses) to
+    plain JSON types; drop anything that won't serialize."""
+    import numpy as np
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, (int, float, str, bool)) or obj is None:
+        return obj
+    return repr(obj)
 
 
 def main() -> None:
@@ -27,13 +52,19 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="run one suite")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale scenes (slower)")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<suite>.json at the repo root")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for name, fn in SUITES.items():
         if args.only and args.only != name:
             continue
         print(f"# --- {name} ---")
-        fn(full=args.full)
+        result = fn(full=args.full)
+        if args.json:
+            out = ROOT / f"BENCH_{name}.json"
+            out.write_text(json.dumps(_jsonable(result), indent=2) + "\n")
+            print(f"# wrote {out}")
 
 
 if __name__ == '__main__':

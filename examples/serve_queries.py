@@ -11,14 +11,12 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Knobs, MappingServer
-from repro.core.query import query_server
 from repro.data.scenes import make_scene, scene_stream
 from repro.perception.embedder import OracleEmbedder
-from repro.serving.batching import BatchScheduler
+from repro.serving.batching import BatchScheduler, make_query_step_fn
 
 
 def main():
@@ -33,14 +31,8 @@ def main():
                                         keyframe_interval=5, h=120, w=160)):
         srv.process_frame(fr, classes, jax.random.fold_in(key, i))
 
-    batched_query = jax.jit(jax.vmap(lambda e: query_server(srv.store, e)))
-
-    def step_fn(payloads):
-        qs = jnp.stack(payloads)
-        res = batched_query(qs)
-        return [(int(res.oids[i, 0]), float(res.scores[i, 0]))
-                for i in range(len(payloads))]
-
+    # one fused similarity+top-k sweep per engine step, padded to batch_size
+    step_fn = make_query_step_fn(lambda: srv.store, k=5, pad_to=8)
     sched = BatchScheduler(batch_size=8, step_fn=step_fn, hedge_after_ms=50.0)
     mapped = sorted(set(np.asarray(srv.store.label)[
         np.asarray(srv.store.active)]))

@@ -9,7 +9,14 @@ objects; transient observations are pruned by obs_count gating downstream.
 TPU adaptation: the per-detection greedy loop of the reference pipelines
 becomes a batched cost matrix [max_detections, capacity] (an MXU matmul for
 the cosine term, the pairwise-distance kernel in kernels/pairwise for the
-spatial term) + a small sequential resolve over <=32 detections.
+spatial term) + a fully batched resolve: argmax per detection, within-frame
+conflict resolution (detections are distinct objects by construction, so at
+most one detection may merge into a store slot), one vmapped merge over the
+detection batch, and one scatter per store field.  No per-detection scan —
+the whole frame is a single XLA dispatch under jit.
+
+``associate_reference`` keeps the original sequential-scan semantics as the
+equivalence oracle (tests/test_batched_equivalence.py).
 """
 from __future__ import annotations
 
@@ -51,11 +58,88 @@ def associate(store: ObjectStore, det: Detections, *, frame: jax.Array,
               ema: float = 0.25) -> ObjectStore:
     """Associate one frame's detections into the store. jit-able.
 
-    Scores are computed once as a batched [D, cap] matrix (the object-level
-    parallelism claim: one MXU matmul instead of a per-object loop), then a
-    short sequential resolve merges/inserts — detections within a frame come
-    from instance segmentation and are distinct objects by construction.
+    Fully batched resolve — no per-detection scan:
+
+      1. argmax over the [D, cap] score matrix picks each detection's best
+         existing object; within-frame conflicts (two detections claiming the
+         same slot) are resolved to the highest-scoring claimant, losers fall
+         through to the insert path (detections in one frame come from
+         instance segmentation and are distinct objects by construction).
+      2. merge values (embedding EMA, merged+recapped cloud, centroid/bbox)
+         are computed for the whole detection batch with one vmap.
+      3. inserts are assigned free slots in detection order (matching the
+         sequential semantics: the r-th inserting detection takes the r-th
+         free slot by ascending index and id ``next_id + r``).
+      4. each store field is written with ONE scatter; rows that neither
+         merge nor insert target index ``cap``, which JAX scatter drops.
     """
+    score, _ = association_scores(store, det)
+    D, cap = score.shape
+    frame = jnp.asarray(frame, jnp.int32)
+    point_budget = min(point_budget, store.points.shape[1])
+
+    # --- 1. resolve matches + within-frame conflicts
+    j_star = jnp.argmax(score, axis=1)                          # [D]
+    best = jnp.take_along_axis(score, j_star[:, None], 1)[:, 0]
+    wants = (best >= match_threshold) & det.valid
+    claim = wants[:, None] & (j_star[:, None] == jnp.arange(cap)[None, :])
+    claim_score = jnp.where(claim, best[:, None], -jnp.inf)     # [D, cap]
+    winner = jnp.argmax(claim_score, axis=0)                    # [cap]
+    is_match = wants & (winner[j_star] == jnp.arange(D))
+
+    # --- 2. geometry for the whole batch with ONE vmapped merge: selecting
+    # the inputs (store cloud for matches, an empty n_a=0 cloud for inserts,
+    # under which merge_clouds degenerates to downsample(det.points)) is
+    # cheaper than computing both the merge and insert variants per row.
+    tgt_emb = store.embed[j_star]                               # [D, E]
+    memb = (1 - ema) * tgt_emb + ema * det.embed
+    memb = memb / jnp.maximum(
+        jnp.linalg.norm(memb, axis=-1, keepdims=True), 1e-9)
+    n_a = jnp.where(is_match, store.n_points[j_star], 0)
+    npts, nn = jax.vmap(
+        lambda pa, na, pb, nb: geo.merge_clouds(pa, na, pb, nb, point_budget)
+    )(store.points[j_star], n_a, det.points, det.n_points)
+    nc, nmn, nmx = jax.vmap(geo.centroid_bbox)(npts, nn)
+
+    # --- 3. free-slot assignment for inserts in detection order
+    do_insert = det.valid & ~is_match
+    rank = jnp.maximum(jnp.cumsum(do_insert) - 1, 0)            # [D]
+    free_order = jnp.argsort(store.active)      # stable: free slots, asc idx
+    n_free = (~store.active).sum()
+    ins_ok = do_insert & (jnp.cumsum(do_insert) - 1 < n_free)
+    ins_slot = free_order[jnp.minimum(rank, cap - 1)]
+
+    # --- 4. one scatter per field; non-writing rows hit index cap (dropped)
+    tgt = jnp.where(is_match, j_star, jnp.where(ins_ok, ins_slot, cap))
+    new_emb = jnp.where(is_match[:, None], memb, det.embed)
+    new_obs = jnp.where(is_match, store.obs_count[j_star] + 1, 1)
+    new_ver = jnp.where(is_match, store.version[j_star] + 1, 1)
+    new_ids = jnp.where(is_match, store.ids[j_star], store.next_id + rank)
+    n_inserted = jnp.minimum(do_insert.sum(), n_free).astype(jnp.int32)
+    return store._replace(
+        ids=store.ids.at[tgt].set(new_ids),
+        active=store.active.at[tgt].set(True),
+        embed=store.embed.at[tgt].set(new_emb),
+        label=store.label.at[tgt].set(
+            jnp.where(is_match, store.label[j_star], det.label)),
+        points=store.points.at[tgt].set(npts),
+        n_points=store.n_points.at[tgt].set(nn),
+        centroid=store.centroid.at[tgt].set(nc),
+        bbox_min=store.bbox_min.at[tgt].set(nmn),
+        bbox_max=store.bbox_max.at[tgt].set(nmx),
+        obs_count=store.obs_count.at[tgt].set(new_obs),
+        version=store.version.at[tgt].set(new_ver),
+        last_seen=store.last_seen.at[tgt].set(frame),
+        next_id=store.next_id + n_inserted,
+    )
+
+
+def associate_reference(store: ObjectStore, det: Detections, *,
+                        frame: jax.Array, match_threshold: float = 0.6,
+                        point_budget: int = 2000,
+                        ema: float = 0.25) -> ObjectStore:
+    """Seed sequential-scan associate — the equivalence oracle for the
+    batched path above (identical semantics on conflict-free frames)."""
     score, cent_d = association_scores(store, det)
     D, cap = score.shape
     frame = jnp.asarray(frame, jnp.int32)
@@ -71,9 +155,9 @@ def associate(store: ObjectStore, det: Detections, *, frame: jax.Array,
         def merge(st: ObjectStore) -> ObjectStore:
             new_emb = (1 - ema) * st.embed[j] + ema * det.embed[i]
             new_emb = new_emb / jnp.maximum(jnp.linalg.norm(new_emb), 1e-9)
-            mpts, mn_ = geo.merge_clouds(st.points[j], st.n_points[j],
-                                         det.points[i], det.n_points[i],
-                                         point_budget)
+            mpts, mn_ = geo.merge_clouds_argsort(
+                st.points[j], st.n_points[j], det.points[i],
+                det.n_points[i], point_budget)
             c, mn, mx = geo.centroid_bbox(mpts, mn_)
             return st._replace(
                 embed=st.embed.at[j].set(new_emb),

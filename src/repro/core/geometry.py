@@ -79,7 +79,40 @@ def centroid_bbox(points: jax.Array, n: jax.Array):
 
 
 def merge_clouds(pts_a, n_a, pts_b, n_b, budget: int):
-    """Merge two masked clouds and re-cap at budget (association merge)."""
+    """Merge two masked clouds and re-cap at budget (association merge).
+
+    Validity is positional (``arange < n``), so "compact valid-a then
+    valid-b" is just the concatenation of the two prefixes — the merged
+    cloud's row i is ``a[i]`` for i < n_a else ``b[i - n_a]``.  Composing
+    that with the downsample stride gather gives the whole merge as TWO
+    gathers and a select: no [Pa+Pb] intermediate, no argsort compaction
+    (the seed hot-spot, kept as ``merge_clouds_argsort`` below as the
+    benchmark baseline).  Outputs are identical to the seed path whenever
+    ``n_a <= budget`` — which the mapping pipeline guarantees by passing
+    ``budget == max_object_points_server`` (the store row size bounding
+    n_a).  Beyond that regime the seed path counted phantom valid points
+    (its n included the part of cloud a past the budget crop) and read
+    rows past the valid prefix, which this version does not reproduce.
+    """
+    Pa = min(budget, pts_a.shape[0])
+    Pb = pts_b.shape[0]
+    n_a = jnp.minimum(n_a, Pa)
+    n = jnp.minimum(n_a + jnp.minimum(n_b, Pb), Pa + Pb).astype(jnp.int32)
+    nn = jnp.maximum(n, 1)                      # downsample's empty-cloud quirk
+    ar = jnp.arange(budget)
+    idx = jnp.where(nn > budget, (ar * nn) // budget, ar)
+    from_a = idx < n_a
+    out = jnp.where(from_a[:, None],
+                    pts_a[jnp.minimum(idx, Pa - 1)],
+                    pts_b[jnp.clip(idx - n_a, 0, Pb - 1)])
+    n_out = jnp.minimum(nn, budget)
+    valid = ar < n_out
+    return jnp.where(valid[:, None], out, 0.0), n_out.astype(jnp.int32)
+
+
+def merge_clouds_argsort(pts_a, n_a, pts_b, n_b, budget: int):
+    """Seed implementation of merge_clouds (argsort compaction) — the
+    baseline for the association microbenchmark and equivalence tests."""
     both = jnp.concatenate([pts_a[:budget], pts_b], axis=0)
     # compact: valid-a first, then valid-b
     Pa = pts_a[:budget].shape[0]

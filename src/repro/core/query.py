@@ -47,8 +47,35 @@ def query_local(m: LocalMap, query_embed: jax.Array, *, k: int = 5,
                             use_pallas=use_pallas)
 
 
+def _batched_topk(query_embeds: jax.Array, embeds: jax.Array,
+                  active: jax.Array, ids: jax.Array, k: int, *,
+                  use_pallas: bool = False) -> QueryResult:
+    """[Q, E] query batch against one map — a single embedding-table sweep.
+
+    use_pallas routes to the multi-query grid kernel (queries resident in
+    VMEM, table streamed once for all Q); the jnp path is one [Q, cap]
+    matmul + top_k, still a single dispatch rather than Q vmapped sweeps.
+    """
+    if use_pallas:
+        from repro.kernels import ops as kops
+        scores, slots = kops.query_topk_multi(query_embeds, embeds, active, k)
+    else:
+        sim = query_embeds @ embeds.T                   # [Q, cap]
+        sim = jnp.where(active[None, :], sim, -jnp.inf)
+        scores, slots = jax.lax.top_k(sim, k)
+    oids = jnp.where(slots >= 0, ids[jnp.maximum(slots, 0)], 0)
+    return QueryResult(oids=oids, scores=scores, slots=slots)
+
+
 def batched_query_local(m: LocalMap, query_embeds: jax.Array, *, k: int = 5,
                         use_pallas: bool = False) -> QueryResult:
     """[Q, E] query batch -> QueryResult with leading Q dim."""
-    return jax.vmap(lambda q: query_local(m, q, k=k, use_pallas=use_pallas))(
-        query_embeds)
+    return _batched_topk(query_embeds, m.embed, m.active, m.ids, k,
+                         use_pallas=use_pallas)
+
+
+def batched_query_server(store: ObjectStore, query_embeds: jax.Array, *,
+                         k: int = 5, use_pallas: bool = False) -> QueryResult:
+    """[Q, E] query batch against the server store (the serving batch step)."""
+    return _batched_topk(query_embeds, store.embed, store.active, store.ids,
+                         k, use_pallas=use_pallas)

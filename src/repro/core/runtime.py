@@ -25,8 +25,9 @@ import jax.numpy as jnp
 
 from repro.core import query as query_mod
 from repro.core.knobs import Knobs
-from repro.core.local_map import (LocalMap, apply_update, compute_priority,
-                                  init_local_map, local_map_nbytes)
+from repro.core.local_map import (LocalMap, apply_update, apply_updates_batch,
+                                  compute_priority, init_local_map,
+                                  local_map_nbytes)
 from repro.core.store import ObjectStore
 from repro.core.updates import SyncState, collect_updates, init_sync
 
@@ -88,7 +89,25 @@ class DeviceClient:
             m, e, use_pallas=self.use_pallas))
         self._apply = jax.jit(apply_update)
 
+        def _ingest_fn(m, batch, user_pos, interest_embeds):
+            pri = compute_priority(batch.embed, batch.label, batch.centroid,
+                                   user_pos=user_pos, knobs=self.knobs,
+                                   interest_embeds=interest_embeds)
+            return apply_updates_batch(m, batch, pri)
+        self._ingest = jax.jit(_ingest_fn)
+
     def ingest(self, packet, *, user_pos, interest_embeds=None):
+        """Apply a whole UpdatePacket in ONE jitted dispatch: batched
+        compute_priority + apply_updates_batch (scan inside the jit) —
+        vs the seed's per-object apply_update loop (N dispatches/tick)."""
+        if packet is None or packet.count == 0:
+            return
+        self.local = self._ingest(self.local, packet.batch, user_pos,
+                                  interest_embeds)
+
+    def ingest_sequential(self, packet, *, user_pos, interest_embeds=None):
+        """Seed per-object ingest path — kept as the microbenchmark baseline
+        and the equivalence oracle for the batched path."""
         for u in packet.updates:
             pri = compute_priority(u.embed[None], u.label[None],
                                    u.centroid[None], user_pos=user_pos,

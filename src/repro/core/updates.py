@@ -7,36 +7,78 @@ least ``min_obs_before_sync`` times (transient filtering), and (c) admitted
 by the prioritizer.  Downstream bandwidth is therefore proportional to map
 *changes*; the device-cloud baseline ships the full map each tick.
 
+The packet body is a struct-of-arrays UpdateBatch (local_map.py): one jitted
+gather + vmapped downsample builds the whole tick instead of a per-object
+Python loop, and the device applies it with one apply_updates_batch call.
+U is padded to a power-of-two bucket so the builder jit retraces O(log U)
+times, not per distinct packet size.
+
 Byte accounting is exact over the wire format below — the downstream-BW
 benchmark (Fig. 6) reads these numbers.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import NamedTuple
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import geometry as geo
 from repro.core.knobs import Knobs
-from repro.core.local_map import ObjectUpdate
+from repro.core.local_map import ObjectUpdate, UpdateBatch
 from repro.core.store import ObjectStore
 
 # wire format per object: id(4) + label(2) + version(4) + n_points(2)
 # + centroid(3*4) + embedding(E*2, fp16) + points(n*3*2, fp16)
 _HEADER_B = 4 + 2 + 4 + 2 + 12
 
+_MIN_BUCKET = 8
+
 
 def update_nbytes(embed_dim: int, n_points: int) -> int:
     return _HEADER_B + 2 * embed_dim + 6 * int(n_points)
 
 
+def _bucket(n: int) -> int:
+    b = _MIN_BUCKET
+    while b < n:
+        b *= 2
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("budget",))
+def _gather_batch(store: ObjectStore, idx: jax.Array, valid: jax.Array,
+                  budget: int) -> UpdateBatch:
+    """Build the SoA packet body for slots ``idx`` in one dispatch."""
+    pts, n = jax.vmap(lambda p, m: geo.downsample(p, m, budget))(
+        store.points[idx], store.n_points[idx])
+    cent = jax.vmap(lambda p, m: geo.centroid_bbox(p, m)[0])(pts, n)
+    return UpdateBatch(
+        oid=store.ids[idx], embed=store.embed[idx], label=store.label[idx],
+        points=pts.astype(jnp.float16), n_points=n, centroid=cent,
+        version=store.version[idx], valid=valid)
+
+
 @dataclass
 class UpdatePacket:
-    updates: list            # list[ObjectUpdate]
+    batch: UpdateBatch | None    # None for an empty tick
+    count: int                   # live rows in batch (rest is padding)
     nbytes: int
     tick: int
+
+    @property
+    def updates(self) -> list:
+        """Back-compat AoS view: list[ObjectUpdate] of the live rows."""
+        if self.batch is None or self.count == 0:
+            return []
+        b = self.batch
+        return [ObjectUpdate(oid=b.oid[i], embed=b.embed[i], label=b.label[i],
+                             points=b.points[i], n_points=b.n_points[i],
+                             centroid=b.centroid[i], version=b.version[i])
+                for i in range(self.count)]
 
 
 class SyncState(NamedTuple):
@@ -69,21 +111,23 @@ def collect_updates(store: ObjectStore, sync: SyncState, knobs: Knobs, *,
     if max_updates is not None:
         idx = idx[:max_updates]
 
-    Pc = knobs.max_object_points_client
-    updates, nbytes = [], 0
-    ids = np.asarray(store.ids)
-    labels = np.asarray(store.label)
-    for i in idx:
-        pts, n = geo.downsample(store.points[i], store.n_points[i], Pc)
-        c, _, _ = geo.centroid_bbox(pts, n)
-        u = ObjectUpdate(
-            oid=jnp.asarray(ids[i]), embed=store.embed[i],
-            label=jnp.asarray(labels[i]), points=pts.astype(jnp.float16),
-            n_points=n, centroid=c, version=jnp.asarray(version[i]))
-        updates.append(u)
-        nbytes += update_nbytes(store.embed.shape[1], int(n))
-
     new_synced = sync.synced_version.copy()
     new_synced[idx] = version[idx]
-    return UpdatePacket(updates=updates, nbytes=nbytes, tick=tick), \
-        SyncState(synced_version=new_synced)
+    new_sync = SyncState(synced_version=new_synced)
+    U = len(idx)
+    if U == 0:
+        return UpdatePacket(batch=None, count=0, nbytes=0, tick=tick), \
+            new_sync
+
+    Ub = _bucket(U)
+    idx_pad = np.zeros((Ub,), np.int64)
+    idx_pad[:U] = idx
+    valid = np.arange(Ub) < U
+    batch = _gather_batch(store, jnp.asarray(idx_pad), jnp.asarray(valid),
+                          knobs.max_object_points_client)
+    # exact per-object byte accounting (padding rows excluded)
+    n_host = np.asarray(batch.n_points)[:U]
+    E = store.embed.shape[1]
+    nbytes = U * (_HEADER_B + 2 * E) + 6 * int(n_host.sum())
+    return UpdatePacket(batch=batch, count=U, nbytes=nbytes, tick=tick), \
+        new_sync

@@ -26,6 +26,13 @@ def query_topk(q, embeds, active, k: int):
                                  interpret=_interpret())
 
 
+@partial(jax.jit, static_argnums=(3,))
+def query_topk_multi(qs, embeds, active, k: int):
+    """[Q, E] query batch: one embedding-table sweep serves all Q queries."""
+    return _qt.query_topk_multi_pallas(qs, embeds, active, k,
+                                       interpret=_interpret())
+
+
 @jax.jit
 def nearest_dist(a, b, b_valid):
     """Pads coords to 8 lanes then runs the blocked kernel."""

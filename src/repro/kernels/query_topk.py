@@ -1,15 +1,26 @@
-"""Fused query-similarity + running top-k Pallas kernel.
+"""Fused query-similarity + running top-k Pallas kernels.
 
-SemanticXR's query hot-spot (Sec. 2.3.2 / Fig. 5): score one text embedding
+SemanticXR's query hot-spot (Sec. 2.3.2 / Fig. 5): score text embeddings
 against every object embedding and keep the best k — the per-query cost that
 grows with map size.  The jnp path materializes the full [N] similarity
-vector in HBM, then runs a full top-k pass (second HBM sweep).  This kernel
-streams the embedding table through VMEM once: each grid step matmuls an
+vector in HBM, then runs a full top-k pass (second HBM sweep).  These kernels
+stream the embedding table through VMEM once: each grid step matmuls an
 [Nb, E] block against the query (MXU), masks inactive slots, and folds the
 block's candidates into a [k]-sized running top-k held in the output refs —
 one HBM pass, no [N] intermediate.
 
-Grid: (N // Nb,), sequential on TPU, so outputs act as cross-step carries.
+The block fold is a proper top-k merge: top-k of the block (sort-based,
+O(Nb log Nb) work on the VPU) then a [2k] merge with the running list —
+instead of the seed's k sequential argmax passes over the [k + Nb]
+candidate buffer (O(k·(k+Nb))).
+
+Two variants:
+  * ``query_topk_pallas``        — one query [E], grid (N/Nb,).
+  * ``query_topk_multi_pallas``  — a [Q, E] query batch resident in VMEM,
+    same grid: the embedding table streams through HBM ONCE for all Q
+    queries (the serving batch step), instead of Q full sweeps.
+
+Grids are sequential on TPU, so outputs act as cross-step carries.
 """
 from __future__ import annotations
 
@@ -22,7 +33,34 @@ from jax.experimental import pallas as pl
 NEG = -1e30
 
 
-def _kernel(q_ref, e_ref, m_ref, vals_ref, idx_ref, *, k: int, block_n: int):
+def _merge_topk(run_v, run_i, sim, base, k: int):
+    """Fold one block's scores into the running (vals, idx) top-k lists.
+
+    run_v/run_i: [Q, k] running top-k; sim: [Q, Nb] block scores.
+    Proper merge: block top-k, then top-k of the [2k] concatenation.
+    """
+    bv, bloc = jax.lax.top_k(sim, k)                       # [Q, k]
+    bi = base + bloc.astype(jnp.int32)
+    cand_v = jnp.concatenate([run_v, bv], axis=1)          # [Q, 2k]
+    cand_i = jnp.concatenate([run_i, bi], axis=1)
+    mv, sel = jax.lax.top_k(cand_v, k)
+    mi = jnp.take_along_axis(cand_i, sel, axis=1)
+    return mv, mi
+
+
+def query_topk_pallas(q: jax.Array, embeds: jax.Array, active: jax.Array,
+                      k: int, *, block_n: int = 1024,
+                      interpret: bool = True):
+    """q: [E]; embeds: [N, E]; active: [N] -> (scores [k], idx [k]).
+
+    The Q=1 special case of the multi-query kernel below."""
+    vals, idx = query_topk_multi_pallas(q[None, :], embeds, active, k,
+                                        block_n=block_n, interpret=interpret)
+    return vals[0], idx[0]
+
+
+def _multi_kernel(q_ref, e_ref, m_ref, vals_ref, idx_ref, *, k: int,
+                  block_n: int):
     step = pl.program_id(0)
 
     @pl.when(step == 0)
@@ -30,35 +68,27 @@ def _kernel(q_ref, e_ref, m_ref, vals_ref, idx_ref, *, k: int, block_n: int):
         vals_ref[...] = jnp.full_like(vals_ref, NEG)
         idx_ref[...] = jnp.full_like(idx_ref, -1)
 
-    # [Nb, E] @ [E, 1] -> [Nb, 1] on the MXU
-    sim = jnp.dot(e_ref[...], q_ref[...],
-                  preferred_element_type=jnp.float32)          # [Nb, 1]
-    sim = jnp.where(m_ref[...] > 0, sim, NEG)[:, 0]            # [Nb]
+    # [Q, E] @ [E, Nb] -> [Q, Nb] on the MXU — one matmul serves all queries
+    sim = jnp.dot(q_ref[...], e_ref[...].T,
+                  preferred_element_type=jnp.float32)          # [Q, Nb]
+    sim = jnp.where(m_ref[...].T > 0, sim, NEG)
     base = step * block_n
-    gidx = base + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
-
-    cand_v = jnp.concatenate([vals_ref[0], sim])               # [k + Nb]
-    cand_i = jnp.concatenate([idx_ref[0], gidx])
-
-    # k selection passes over the merged candidates (k is small & static)
-    out_v = []
-    out_i = []
-    for _ in range(k):
-        j = jnp.argmax(cand_v)
-        out_v.append(cand_v[j])
-        out_i.append(cand_i[j])
-        cand_v = jnp.where(
-            jax.lax.broadcasted_iota(jnp.int32, cand_v.shape, 0) == j,
-            NEG, cand_v)
-    vals_ref[0] = jnp.stack(out_v)
-    idx_ref[0] = jnp.stack(out_i)
+    mv, mi = _merge_topk(vals_ref[...], idx_ref[...], sim, base, k)
+    vals_ref[...] = mv
+    idx_ref[...] = mi
 
 
-def query_topk_pallas(q: jax.Array, embeds: jax.Array, active: jax.Array,
-                      k: int, *, block_n: int = 1024,
-                      interpret: bool = True):
-    """q: [E]; embeds: [N, E]; active: [N] -> (scores [k], idx [k])."""
-    N, E = embeds.shape
+def query_topk_multi_pallas(qs: jax.Array, embeds: jax.Array,
+                            active: jax.Array, k: int, *,
+                            block_n: int = 1024, interpret: bool = True):
+    """qs: [Q, E]; embeds: [N, E]; active: [N] -> ([Q, k], [Q, k]).
+
+    The query batch stays resident in VMEM; the embedding table streams
+    through once for ALL Q queries (vs Q independent sweeps when vmapping
+    the single-query kernel).
+    """
+    Q, E = qs.shape
+    N = embeds.shape[0]
     pad = (-N) % block_n
     if pad:
         embeds = jnp.pad(embeds, ((0, pad), (0, 0)))
@@ -67,21 +97,21 @@ def query_topk_pallas(q: jax.Array, embeds: jax.Array, active: jax.Array,
     mask = active.astype(jnp.float32)[:, None]
     grid = (Np // block_n,)
     vals, idx = pl.pallas_call(
-        functools.partial(_kernel, k=k, block_n=block_n),
+        functools.partial(_multi_kernel, k=k, block_n=block_n),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((E, 1), lambda i: (0, 0)),            # query resident
+            pl.BlockSpec((Q, E), lambda i: (0, 0)),            # queries resident
             pl.BlockSpec((block_n, E), lambda i: (i, 0)),      # stream blocks
             pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, k), lambda i: (0, 0)),
-            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((Q, k), lambda i: (0, 0)),
+            pl.BlockSpec((Q, k), lambda i: (0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((1, k), jnp.float32),
-            jax.ShapeDtypeStruct((1, k), jnp.int32),
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
         ],
         interpret=interpret,
-    )(q[:, None], embeds, mask)
-    return vals[0], idx[0]
+    )(qs, embeds, mask)
+    return vals, idx

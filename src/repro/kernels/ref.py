@@ -13,6 +13,12 @@ def query_topk_ref(q: jax.Array, embeds: jax.Array, active: jax.Array,
     return jax.lax.top_k(sim, k)
 
 
+def query_topk_multi_ref(qs: jax.Array, embeds: jax.Array, active: jax.Array,
+                         k: int):
+    """qs: [Q, E]; embeds: [N, E]; active: [N] -> ([Q, k], [Q, k])."""
+    return jax.vmap(lambda q: query_topk_ref(q, embeds, active, k))(qs)
+
+
 def nearest_dist_ref(a: jax.Array, b: jax.Array, b_valid: jax.Array):
     """a: [M, D]; b: [N, D]; b_valid: [N] -> min squared distance per a row.
     (the association/chamfer spatial primitive)"""

@@ -16,6 +16,8 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
+import numpy as np
+
 
 @dataclass(order=True)
 class Request:
@@ -87,3 +89,43 @@ class BatchScheduler:
                 break
             self.step()
         return self.done
+
+
+def make_query_step_fn(get_map, *, k: int = 5, use_pallas: bool = False,
+                       pad_to: int | None = None):
+    """Build a BatchScheduler ``step_fn`` over the SemanticXR query engine.
+
+    Payloads are query embeddings [E].  Each engine step stacks them into one
+    [Q, E] batch and runs a SINGLE fused similarity+top-k sweep over the map
+    (the multi-query Pallas kernel when use_pallas — the embedding table
+    streams through once for the whole batch, instead of Q full sweeps).
+
+    ``get_map`` returns the current map-like object (ObjectStore or LocalMap
+    — anything with .embed/.active/.ids), re-read every step so a live
+    mapping server can keep mutating it between steps.  ``pad_to`` pads the
+    ragged tail batch to a fixed Q (defaults to the scheduler batch size at
+    the call site) so the jitted step sees one shape, not one per tail size.
+
+    Returns (oid, score) of the top hit per request, in payload order.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.query import _batched_topk
+
+    fn = jax.jit(lambda emb, act, ids, qs: _batched_topk(
+        qs, emb, act, ids, k, use_pallas=use_pallas))
+
+    def step_fn(payloads: list) -> list:
+        m = get_map()
+        qs = jnp.stack(payloads)
+        q = qs.shape[0]
+        width = max(pad_to or 0, q)
+        if width > q:
+            qs = jnp.pad(qs, ((0, width - q), (0, 0)))
+        res = fn(m.embed, m.active, m.ids, qs)
+        oids = np.asarray(res.oids[:q, 0])
+        scores = np.asarray(res.scores[:q, 0])
+        return [(int(oids[i]), float(scores[i])) for i in range(q)]
+
+    return step_fn

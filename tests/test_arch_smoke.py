@@ -9,6 +9,9 @@ import pytest
 from repro.configs import ASSIGNED, SMOKE_CELL, get_config, make_inputs
 from repro.models.api import model_api
 
+# ~4-5 min of fwd/bwd compiles across 10 LLM configs — out of tier-1
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("arch", ASSIGNED)
 def test_smoke_train_step(arch):

@@ -1,0 +1,158 @@
+"""Equivalence of the batched hot paths against the seed sequential oracles.
+
+  * associate (batched resolve) == associate_reference (seed scan) on
+    randomized conflict-free frames — detections within a frame are distinct
+    objects by construction (instance segmentation), which is exactly the
+    regime where the two semantics coincide.
+  * apply_updates_batch (one jitted scan) == folding apply_update row by
+    row, including eviction order on an over-subscribed local map.
+  * multi-query Pallas top-k == the jnp reference path, and the batched
+    serving query == Q independent single queries.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import association as assoc
+from repro.core.knobs import Knobs
+from repro.core.local_map import (ObjectUpdate, UpdateBatch, apply_update,
+                                  apply_updates_batch, init_local_map)
+from repro.core.query import batched_query_local, query_local
+from repro.core.store import init_store
+
+CAP, E, P, D = 32, 16, 64, 8
+
+
+def _assert_stores_equal(a, b, msg=""):
+    for name, xa, xb in zip(a._fields, a, b):
+        np.testing.assert_allclose(
+            np.asarray(xa, np.float64), np.asarray(xb, np.float64),
+            rtol=1e-5, atol=1e-6, err_msg=f"{msg} field {name}")
+
+
+def _random_frame(store, rng, counter, n_match, n_insert):
+    """Detections: near-copies of distinct active slots (matches) plus
+    globally-unique far-away clusters (inserts) — conflict-free frames."""
+    act = np.nonzero(np.asarray(store.active))[0]
+    emb = rng.normal(size=(D, E)).astype(np.float32)
+    pts = rng.normal(size=(D, P, 3)).astype(np.float32) * 0.1
+    for i in range(D):
+        counter[0] += 1
+        pts[i] += counter[0] * 20.0
+    npts = rng.integers(5, P, size=D).astype(np.int32)
+    valid = np.zeros(D, bool)
+    valid[:n_match + n_insert] = True
+    chosen = (rng.choice(act, size=min(n_match, len(act)), replace=False)
+              if len(act) else np.zeros((0,), np.int64))
+    for i, j in enumerate(chosen):
+        emb[i] = np.asarray(store.embed[j]) + rng.normal(size=E) * 0.01
+        pts[i] = np.asarray(store.centroid[j]) + rng.normal(size=(P, 3)) * 0.1
+    emb /= np.maximum(np.linalg.norm(emb, axis=1, keepdims=True), 1e-9)
+    return assoc.Detections(
+        embed=jnp.asarray(emb),
+        label=jnp.asarray(rng.integers(0, 5, D), jnp.int32),
+        points=jnp.asarray(pts), n_points=jnp.asarray(npts),
+        valid=jnp.asarray(valid))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_associate_matches_seed_scan(seed):
+    rng = np.random.default_rng(seed)
+    counter = [0]
+    sa = init_store(CAP, E, P)
+    sb = init_store(CAP, E, P)
+    for f in range(8):
+        det = _random_frame(sa, rng, counter,
+                            n_match=int(rng.integers(0, 4)) if f else 0,
+                            n_insert=int(rng.integers(1, 4)))
+        sa = assoc.associate(sa, det, frame=jnp.asarray(f))
+        sb = assoc.associate_reference(sb, det, frame=jnp.asarray(f))
+        _assert_stores_equal(sa, sb, f"seed {seed} frame {f}")
+    assert int(sa.active.sum()) > 0
+
+
+def test_associate_full_store_overflow():
+    """Inserts past capacity are dropped in detection order, ids advance
+    only for performed inserts — exactly like the seed scan."""
+    rng = np.random.default_rng(7)
+    counter = [0]
+    sa = init_store(4, E, P)
+    sb = init_store(4, E, P)
+    for f in range(4):
+        det = _random_frame(sa, rng, counter, n_match=0, n_insert=3)
+        sa = assoc.associate(sa, det, frame=jnp.asarray(f))
+        sb = assoc.associate_reference(sb, det, frame=jnp.asarray(f))
+        _assert_stores_equal(sa, sb, f"overflow frame {f}")
+    assert int(sa.active.sum()) == 4
+    assert int(sa.next_id) == int(sb.next_id)
+
+
+def _mk_batch(rng, U, cap_pts, n_valid=None):
+    n_valid = U if n_valid is None else n_valid
+    emb = rng.normal(size=(U, E)).astype(np.float32)
+    emb /= np.maximum(np.linalg.norm(emb, axis=1, keepdims=True), 1e-9)
+    return UpdateBatch(
+        oid=jnp.asarray(rng.integers(1, 12, U), jnp.int32),  # dup oids likely
+        embed=jnp.asarray(emb),
+        label=jnp.asarray(rng.integers(0, 5, U), jnp.int32),
+        points=jnp.asarray(rng.normal(size=(U, cap_pts, 3)), jnp.float16),
+        n_points=jnp.asarray(rng.integers(1, cap_pts, U), jnp.int32),
+        centroid=jnp.asarray(rng.normal(size=(U, 3)), jnp.float32),
+        version=jnp.asarray(rng.integers(1, 9, U), jnp.int32),
+        valid=jnp.asarray(np.arange(U) < n_valid))
+
+
+@pytest.mark.parametrize("seed,n_valid", [(0, 24), (1, 24), (2, 17)])
+def test_apply_updates_batch_matches_sequential_fold(seed, n_valid):
+    """Tiny capacity (8) + 24 updates with duplicate ids -> refreshes,
+    evictions, and rejections; the batched scan must reproduce the exact
+    sequential fold, padding rows inert."""
+    kn = Knobs(client_capacity=8, max_object_points_client=16)
+    rng = np.random.default_rng(seed)
+    batch = _mk_batch(rng, 24, 16, n_valid)
+    pris = jnp.asarray(rng.uniform(0, 2, 24), jnp.float32)
+
+    m_seq = init_local_map(kn, E)
+    for i in range(24):
+        if not bool(batch.valid[i]):
+            continue
+        u = ObjectUpdate(oid=batch.oid[i], embed=batch.embed[i],
+                         label=batch.label[i], points=batch.points[i],
+                         n_points=batch.n_points[i],
+                         centroid=batch.centroid[i], version=batch.version[i])
+        m_seq = apply_update(m_seq, u, pris[i])
+
+    m_bat = jax.jit(apply_updates_batch)(init_local_map(kn, E), batch, pris)
+    for name, xa, xb in zip(m_bat._fields, m_bat, m_seq):
+        np.testing.assert_allclose(
+            np.asarray(xa, np.float64), np.asarray(xb, np.float64),
+            rtol=1e-6, atol=1e-7, err_msg=f"field {name}")
+    assert int(m_bat.active.sum()) == kn.client_capacity
+
+
+@pytest.mark.parametrize("q,k", [(1, 5), (8, 4), (16, 8)])
+def test_batched_query_matches_single_queries(q, k):
+    """batched_query_local == Q independent query_local calls, and the
+    multi-query Pallas kernel returns results identical to the jnp path."""
+    kn = Knobs(client_capacity=128, max_object_points_client=16)
+    m = init_local_map(kn, E)
+    km = jax.random.key(11)
+    m = m._replace(
+        embed=jax.random.normal(km, (128, E), jnp.float32),
+        active=jax.random.bernoulli(jax.random.key(1), 0.7, (128,)),
+        ids=jnp.arange(1, 129, dtype=jnp.int32))
+    qs = jax.random.normal(jax.random.key(q * 31 + k), (q, E), jnp.float32)
+
+    got = batched_query_local(m, qs, k=k)
+    for i in range(q):
+        one = query_local(m, qs[i], k=k)
+        np.testing.assert_allclose(np.asarray(got.scores[i]),
+                                   np.asarray(one.scores), rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(got.oids[i]),
+                                      np.asarray(one.oids))
+
+    pal = batched_query_local(m, qs, k=k, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(pal.scores), np.asarray(got.scores),
+                               rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(pal.oids), np.asarray(got.oids))

@@ -29,7 +29,10 @@ def _hlo_flops(cfg, cell):
         return logits[:, -1] if logits.ndim == 3 else logits
 
     compiled = jax.jit(fwd).lower(pspecs, ispecs).compile()
-    return compiled.cost_analysis()["flops"]
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):      # some jaxlib versions return [dict]
+        ca = ca[0]
+    return ca["flops"]
 
 
 @pytest.mark.parametrize("arch", ["minitron-4b", "yi-9b", "gemma2-27b",

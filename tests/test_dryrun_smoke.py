@@ -5,9 +5,12 @@ import subprocess
 import sys
 from pathlib import Path
 
+import pytest
+
 ROOT = Path(__file__).resolve().parent.parent
 
 
+@pytest.mark.slow          # ~7 min: compiles a 512-device mesh in a subprocess
 def test_dryrun_cell_compiles(tmp_path):
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun",
