@@ -1,0 +1,123 @@
+"""Fleet-scale benchmark: server tick cost and per-client downstream bytes
+vs fleet size C (the multi-tenant server subsystem, server/session.py).
+
+At a FIXED map size, one update tick for C clients is a single vmapped
+`_collect_fleet` dispatch ([C, N] change detection + priority top-k +
+fused gather/downsample).  The headline number is tick latency growth from
+C=1 to C=64: sub-linear (<< C×) because the per-client work amortizes into
+one dispatch instead of C Python-loop iterations (the seed architecture).
+The `seed_loop` row measures exactly that loop — C independent
+`collect_updates` calls at identical shapes — so the speedup is measured,
+not asserted.
+
+Per-client downstream bytes stay constant in C (each client receives the
+same changed set), which is the scaling story: downstream work ∝ per-client
+map changes, not fleet size.
+
+Writes BENCH_fleet_scale.json via ``benchmarks/run.py --suite fleet_scale
+--json``; smoke mode (CI) runs C ∈ {1, 2} at tiny shapes.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.core.knobs import Knobs
+from repro.core.store import synthetic_store
+from repro.core.updates import collect_updates, init_sync
+from repro.core.local_map import compute_priority
+from repro.server.session import SessionManager
+
+
+def _time(fn, *, reps: int, warmup: int = 3) -> float:
+    """Best-of-3 mean over ``reps`` calls — the container's wall clock is
+    noisy enough (CPU scaling, GC) that a single mean can be 5-10x off."""
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / reps * 1e3)
+    return best
+
+
+def run(full: bool = False, smoke: bool = False):
+    if smoke:
+        sweep, n_obj, cap, E, P, budget, reps = [1, 2], 24, 64, 32, 32, 16, 3
+    elif full:
+        sweep, n_obj, cap, E, P, budget, reps = \
+            [1, 8, 64, 256], 256, 512, 256, 512, 32, 10
+    else:
+        sweep, n_obj, cap, E, P, budget, reps = \
+            [1, 8, 64, 256], 128, 256, 128, 256, 32, 10
+    kn = Knobs(server_capacity=cap, client_capacity=max(budget * 2, 64),
+               max_object_points_server=P,
+               max_object_points_client=max(P // 4, 16),
+               min_obs_before_sync=1)
+    store = synthetic_store(n_obj, cap, E, P)
+
+    results = {"map_objects": n_obj, "capacity": cap, "embed_dim": E,
+               "budget": budget, "sweep": {}}
+    lat_by_c = {}
+    for C in sweep:
+        sm = SessionManager(knobs=kn, n_clients=C, capacity=cap,
+                            budget=budget)
+        fresh = jnp.zeros((C, cap), jnp.int32)
+
+        def tick_once():
+            # every rep ships the top-`budget` changed objects to every
+            # client: reset the sync rows so per-tick work is constant
+            sm.sync = sm.sync._replace(synced_version=fresh)
+            pkt = sm.collect(store)
+            return pkt
+
+        ms = _time(tick_once, reps=reps)
+        pkt = tick_once()
+        per_client_b = float(pkt.nbytes.mean())
+
+        # seed architecture at identical shapes: a Python loop of C
+        # single-client collect_updates calls
+        pri = np.asarray(compute_priority(
+            store.embed, store.label, store.centroid,
+            user_pos=jnp.zeros(3), knobs=kn))
+
+        def seed_loop():
+            for _ in range(C):
+                p, _ = collect_updates(store, init_sync(cap), kn, tick=0,
+                                       priorities=pri, max_updates=budget)
+            jax.block_until_ready(p.batch.n_points)
+
+        seed_ms = _time(seed_loop, reps=max(reps // 2, 2))
+        lat_by_c[C] = ms
+        results["sweep"][str(C)] = {
+            "tick_ms": ms,
+            "seed_loop_ms": seed_ms,
+            "speedup_vs_seed": seed_ms / max(ms, 1e-9),
+            "per_client_bytes": per_client_b,
+            "objects_per_client": float(pkt.counts.mean()),
+        }
+        csv_row(f"fleet_tick[C={C}]", ms * 1e3,
+                f"seed_loop={seed_ms:.2f}ms;"
+                f"speedup={seed_ms / max(ms, 1e-9):.2f}x;"
+                f"bytes/client={per_client_b:.0f}")
+
+    c_lo, c_hi = sweep[0], (64 if 64 in lat_by_c else sweep[-1])
+    growth = lat_by_c[c_hi] / max(lat_by_c[c_lo], 1e-9)
+    sublinear = growth < (c_hi / c_lo)
+    results["growth_C%d_over_C%d" % (c_hi, c_lo)] = growth
+    results["sublinear"] = bool(sublinear)
+    csv_row("fleet_tick_growth", lat_by_c[c_hi] * 1e3,
+            f"C{c_lo}->C{c_hi}={growth:.2f}x;"
+            f"linear_would_be={c_hi / c_lo:.0f}x;"
+            f"sublinear={sublinear}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

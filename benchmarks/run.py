@@ -4,6 +4,7 @@ for the paper artifact it reproduces).  ``--json`` additionally writes
 ``BENCH_<suite>.json`` at the repo root so the perf trajectory is tracked
 across PRs (see EXPERIMENTS.md)."""
 import argparse
+import inspect
 import json
 import sys
 from pathlib import Path
@@ -12,9 +13,9 @@ ROOT = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(ROOT / "src"))
 sys.path.insert(0, str(ROOT))
 
-from benchmarks import (downstream_bw, ingest_tick, local_map_scale,
-                        mapping_latency, power_model, query_latency, roofline,
-                        upstream_bw)
+from benchmarks import (downstream_bw, fleet_scale, ingest_tick,
+                        local_map_scale, mapping_latency, power_model,
+                        query_latency, roofline, upstream_bw)
 
 SUITES = {
     "tab4_fig3_mapping": mapping_latency.run,
@@ -25,6 +26,7 @@ SUITES = {
     "fig7_power": power_model.run,
     "roofline": roofline.run,
     "ingest_tick": ingest_tick.run,
+    "fleet_scale": fleet_scale.run,
 }
 
 
@@ -49,9 +51,12 @@ def _jsonable(obj):
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, help="run one suite")
+    ap.add_argument("--only", "--suite", dest="only", default=None,
+                    help="run one suite")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale scenes (slower)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI smoke (suites that support it)")
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_<suite>.json at the repo root")
     args = ap.parse_args()
@@ -60,9 +65,20 @@ def main() -> None:
         if args.only and args.only != name:
             continue
         print(f"# --- {name} ---")
-        result = fn(full=args.full)
+        kw = {"full": args.full}
+        if args.smoke:
+            if "smoke" not in inspect.signature(fn).parameters:
+                # a suite without a smoke mode would run (and with --json
+                # overwrite) its full-shape trajectory — skip it instead
+                print(f"# {name}: no smoke mode, skipped")
+                continue
+            kw["smoke"] = True
+        result = fn(**kw)
         if args.json:
-            out = ROOT / f"BENCH_{name}.json"
+            # smoke runs get their own file: never clobber the committed
+            # full-shape perf trajectory with tiny-shape numbers
+            suffix = "_smoke" if kw.get("smoke") else ""
+            out = ROOT / f"BENCH_{name}{suffix}.json"
             out.write_text(json.dumps(_jsonable(result), indent=2) + "\n")
             print(f"# wrote {out}")
 

@@ -16,8 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Knobs, MappingServer
-from repro.core.runtime import (CloudService, DeviceClient, NetworkModel,
-                                PowerModel, choose_mode)
+from repro.core.runtime import (ClientSession, CloudService, DeviceClient,
+                                NetworkModel, PowerModel)
 from repro.data.scenes import CLASS_NAMES, make_scene, scene_stream
 from repro.perception.embedder import OracleEmbedder
 
@@ -35,8 +35,9 @@ def main():
     net = NetworkModel(rtt_ms=20.0, outages=((4.0, 8.0),))
     pm = PowerModel()
 
+    sess = ClientSession(dev=dev, net=net, knobs=kn)
+
     key = jax.random.key(0)
-    down_bytes = 0
     t = 0.0
     print(f"{'t':>5} {'net':>6} {'mode':>4} {'mapped':>6} {'local':>5} "
           f"{'downB':>7}  query")
@@ -46,17 +47,14 @@ def main():
         up = net.is_up(t)
         srv.process_frame(fr, classes, jax.random.fold_in(key, i))
         pkt = cloud.update_tick(network_up=up)
-        if pkt is not None:
-            dev.ingest(pkt, user_pos=jnp.zeros(3))
-            down_bytes += pkt.nbytes
-        elif up and cloud.buffered:
+        if pkt is None and up and cloud.buffered:
             pkt = cloud.flush_buffer()
-            dev.ingest(pkt, user_pos=jnp.zeros(3))
-            down_bytes += pkt.nbytes
             print(f"{t:5.1f} reconnect: flushed buffered updates "
                   f"({pkt.nbytes} B)")
+        # shared per-tick client step (also used by server/fleet.py):
+        # outage-aware delivery, ingest, byte accounting, SQ/LQ choice
+        mode = sess.step(t, pkt)
 
-        mode = choose_mode(net, t, kn)
         mapped = set(np.asarray(srv.store.label)[np.asarray(srv.store.active)])
         qtext = ""
         if i % 2 == 0 and mapped:
@@ -69,7 +67,7 @@ def main():
         print(f"{t:5.1f} {'UP' if up else 'DOWN':>6} {mode:>4} "
               f"{int(np.asarray(srv.store.active.sum())):>6} "
               f"{int(np.asarray(dev.local.active.sum())):>5} "
-              f"{down_bytes:>7}  {qtext}")
+              f"{sess.down_bytes:>7}  {qtext}")
 
     p = pm.average_power(streaming=True, server_qps=1 / 3)
     print(f"\ndevice power (streaming + SQ @1q/3s): {p:.2f} W "

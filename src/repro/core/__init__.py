@@ -6,4 +6,4 @@ from repro.core.store import ObjectStore, init_store, store_from_knobs
 from repro.core.local_map import LocalMap, init_local_map, ObjectUpdate
 from repro.core.pipeline import MappingServer, StageTimes
 from repro.core.runtime import (NetworkModel, PowerModel, DeviceClient,
-                                CloudService, choose_mode)
+                                CloudService, ClientSession, choose_mode)

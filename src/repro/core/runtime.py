@@ -16,6 +16,7 @@ streaming power from the +2% figure.
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
 
@@ -45,6 +46,28 @@ class NetworkModel:
     def transfer_ms(self, nbytes: float) -> float:
         return self.rtt_ms + nbytes * 8 / (self.bandwidth_mbps * 1e6) * 1e3
 
+    def delivery_time(self, t: float, nbytes: float) -> float | None:
+        """Completion time of a transfer started at ``t``.
+
+        A transfer whose window straddles an outage start does NOT complete
+        at pre-outage latency: progress stalls through each outage window
+        and resumes after it.  Returns None when the link is down at send
+        time (nothing is put in flight).
+        """
+        if not self.is_up(t):
+            return None
+        remaining = self.transfer_ms(nbytes) * 1e-3
+        cur = t
+        for a, b in sorted(self.outages):
+            if b <= cur:
+                continue
+            gap = max(a - cur, 0.0)
+            if gap >= remaining:
+                return cur + remaining
+            remaining -= gap
+            cur = b
+        return cur + remaining
+
     def measured_latency_ms(self, t: float) -> float:
         """What the client's RGB-D stream monitor observes (Sec. 3.2)."""
         return float("inf") if not self.is_up(t) else self.rtt_ms
@@ -72,6 +95,22 @@ class PowerModel:
 
 
 # ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _client_fns(knobs: Knobs, use_pallas: bool):
+    """Jitted device-side functions, shared by every DeviceClient with the
+    same knobs — a C-client fleet compiles each step once, not C times."""
+    query = jax.jit(lambda m, e: query_mod.query_local(
+        m, e, use_pallas=use_pallas))
+    apply_one = jax.jit(apply_update)
+
+    def _ingest_fn(m, batch, user_pos, interest_embeds):
+        pri = compute_priority(batch.embed, batch.label, batch.centroid,
+                               user_pos=user_pos, knobs=knobs,
+                               interest_embeds=interest_embeds)
+        return apply_updates_batch(m, batch, pri)
+    return query, apply_one, jax.jit(_ingest_fn)
+
+
 @dataclass
 class DeviceClient:
     knobs: Knobs
@@ -85,16 +124,8 @@ class DeviceClient:
     def __post_init__(self):
         if self.local is None:
             self.local = init_local_map(self.knobs, self.embed_dim)
-        self._query = jax.jit(lambda m, e: query_mod.query_local(
-            m, e, use_pallas=self.use_pallas))
-        self._apply = jax.jit(apply_update)
-
-        def _ingest_fn(m, batch, user_pos, interest_embeds):
-            pri = compute_priority(batch.embed, batch.label, batch.centroid,
-                                   user_pos=user_pos, knobs=self.knobs,
-                                   interest_embeds=interest_embeds)
-            return apply_updates_batch(m, batch, pri)
-        self._ingest = jax.jit(_ingest_fn)
+        self._query, self._apply, self._ingest = _client_fns(
+            self.knobs, self.use_pallas)
 
     def ingest(self, packet, *, user_pos, interest_embeds=None):
         """Apply a whole UpdatePacket in ONE jitted dispatch: batched
@@ -173,3 +204,65 @@ def choose_mode(net: NetworkModel, t: float, knobs: Knobs) -> str:
     """SemanticXR-SQ vs -LQ switching on observed latency (Sec. 3.2)."""
     lat = net.measured_latency_ms(t)
     return "SQ" if lat <= knobs.net_latency_switch_threshold_ms else "LQ"
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class ClientSession:
+    """The per-tick client step, shared by the single-client session loop
+    (examples/network_drop_session.py) and the fleet simulator
+    (server/fleet.py) — one code path for packet delivery (outage-aware:
+    a transfer straddling an outage start is delayed, not delivered at
+    pre-outage latency), ingest, byte accounting, and SQ/LQ mode choice.
+    """
+    dev: DeviceClient
+    net: NetworkModel
+    knobs: Knobs
+    user_pos: object = None            # [3] — priority/eviction anchor
+    interest_embeds: object = None
+    dt: float = 1.0                    # tick period (seconds)
+    down_bytes: int = 0
+    delivered: int = 0                 # packets actually ingested
+    delayed: int = 0                   # packets not ingested within their
+    #                                    send tick (outage straddle, slow
+    #                                    link, or FIFO backlog)
+    pending: list = field(default_factory=list)   # [(deliver_at, packet)]
+
+    def __post_init__(self):
+        if self.user_pos is None:
+            self.user_pos = jnp.zeros(3)
+
+    def _ingest(self, packet):
+        self.dev.ingest(packet, user_pos=self.user_pos,
+                        interest_embeds=self.interest_embeds)
+        self.down_bytes += packet.nbytes
+        self.delivered += 1
+
+    def step(self, t: float, packet=None) -> str:
+        """Advance to time ``t``: deliver matured in-flight packets, send
+        ``packet`` (ingesting within the tick unless an outage delays it),
+        and return the query mode ("SQ"/"LQ") for this tick.
+
+        Delivery is FIFO per link: a packet sent while older packets are
+        still in flight queues behind them, so a later (newer-version)
+        packet can never overtake a delayed one and then be overwritten by
+        it when the stale packet matures."""
+        matured = sorted((p for p in self.pending if p[0] <= t),
+                         key=lambda p: p[0])
+        self.pending = [p for p in self.pending if p[0] > t]
+        for _, p in matured:
+            self._ingest(p)
+        if packet is not None and packet.count > 0:
+            send = t
+            while (at := self.net.delivery_time(send, packet.nbytes)) is None:
+                # sender raced an outage start: retransmit after it ends
+                # (walk successive windows — outages may be back-to-back)
+                send = max(b for a, b in self.net.outages if a <= send < b)
+            if self.pending:
+                at = max(at, self.pending[-1][0])      # FIFO behind in-flight
+            if not self.pending and at <= t + self.dt:
+                self._ingest(packet)
+            else:
+                self.delayed += 1
+                self.pending.append((at, packet))
+        return choose_mode(self.net, t, self.knobs)

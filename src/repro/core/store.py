@@ -59,6 +59,38 @@ def store_from_knobs(knobs: Knobs, embed_dim: int) -> ObjectStore:
                       knobs.max_object_points_server)
 
 
+def synthetic_store(n: int, capacity: int, embed_dim: int, max_points: int,
+                    *, seed: int = 0, centroid_low=(-4.0, 0.0, -4.0),
+                    centroid_high=(4.0, 2.0, 4.0), n_labels: int = 20,
+                    obs_count: int = 3) -> ObjectStore:
+    """Directly-filled store with ``n`` active objects — the shared builder
+    for benchmarks and tests that need a fixed-size map without running the
+    mapping pipeline (unit-norm embeddings, random clouds/centroids,
+    version 1, ids 1..n)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    emb = rng.normal(size=(n, embed_dim)).astype(np.float32)
+    emb /= np.linalg.norm(emb, axis=1, keepdims=True)
+    cents = rng.uniform(centroid_low, centroid_high,
+                        size=(n, 3)).astype(np.float32)
+    st = init_store(capacity, embed_dim, max_points)
+    return st._replace(
+        ids=st.ids.at[:n].set(jnp.arange(1, n + 1, dtype=jnp.int32)),
+        active=st.active.at[:n].set(True),
+        embed=st.embed.at[:n].set(emb),
+        label=st.label.at[:n].set(jnp.asarray(
+            rng.integers(0, n_labels, size=n), jnp.int32)),
+        points=st.points.at[:n].set(
+            rng.normal(size=(n, max_points, 3)).astype(np.float32)),
+        n_points=st.n_points.at[:n].set(jnp.asarray(
+            rng.integers(4, max_points, size=n), jnp.int32)),
+        centroid=st.centroid.at[:n].set(cents),
+        obs_count=st.obs_count.at[:n].set(obs_count),
+        version=st.version.at[:n].set(1),
+        next_id=jnp.asarray(n + 1, jnp.int32))
+
+
 def n_active(store: ObjectStore) -> jax.Array:
     return store.active.sum()
 

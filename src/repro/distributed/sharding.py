@@ -291,3 +291,12 @@ def input_pspecs(cfg: cm.ArchConfig, specs, mesh: Mesh, *, global_batch: int):
 def shardings_of(pspecs, mesh: Mesh):
     return jax.tree.map(lambda ps: NamedSharding(mesh, ps), pspecs,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def zone_shard_devices(mesh: Mesh, n_zones: int) -> list:
+    """Round-robin device placement for the fleet server's spatial zone
+    shards (server/zones.py): zone z lives on mesh device z % ndev, so
+    per-zone sync collects and queries run where the shard's arrays live.
+    On the 1-device container every zone maps to the same device (no-op)."""
+    devs = list(mesh.devices.flat)
+    return [devs[z % len(devs)] for z in range(n_zones)]

@@ -1,0 +1,35 @@
+"""Multi-tenant fleet server: the paper's server "multiplexes
+perception/caption/query work from many XR clients" (Sec. 3.2) — this
+subsystem turns the single-tenant pieces into that server.
+
+Three layers:
+
+``session``  SessionManager — C clients' sync state as stacked arrays
+             (``synced_version: [C, N]``, per-client pose / min-obs knobs),
+             so one update tick for the whole fleet is ONE jitted vmapped
+             collect dispatch (`_collect_fleet`) producing C packets, not a
+             Python loop over `core.updates.collect_updates`.
+
+``zones``    ZoneShardedStore — objects partitioned into spatial zones
+             (grid over the room plane), each zone an independent
+             `core.store.ObjectStore` shard, placeable on mesh devices via
+             `distributed.sharding.zone_shard_devices`.  Clients subscribe
+             to the zones their pose overlaps; downstream work scales with
+             per-client zone *changes*, not fleet size.
+
+``fleet``    FleetServer (zones x sessions composition) and FleetSimulator —
+             tens-to-hundreds of simulated clients with heterogeneous
+             `core.runtime.NetworkModel`s (mixed RTTs, staggered outages,
+             join/leave churn), sharing the single-client per-tick step
+             (`core.runtime.ClientSession`) and routing cross-client queries
+             through `serving.batching.BatchScheduler` +
+             `core.query` multi-query top-k.
+
+Benchmarks: `benchmarks/fleet_scale.py` (tick latency and per-client
+downstream bytes vs fleet size C) -> BENCH_fleet_scale.json; see
+EXPERIMENTS.md § Fleet scale.  Tests: tests/test_fleet.py.
+"""
+from repro.server.session import (FleetBatch, FleetPacket, FleetSync,
+                                  SessionManager)
+from repro.server.zones import ZoneGrid, ZoneShardedStore
+from repro.server.fleet import FleetServer, FleetSimulator, SimClient

@@ -1,0 +1,286 @@
+"""Fleet server + simulated client fleet.
+
+FleetServer composes the zone-sharded store (zones.py) with one
+SessionManager per zone: a server tick is one vmapped collect dispatch per
+*dirty* zone — never a Python loop over clients — and a client subscribed
+to quiet zones costs (and receives) nothing.
+
+FleetSimulator drives tens-to-hundreds of clients against one mapped scene:
+heterogeneous NetworkModels (mixed RTTs/bandwidths, staggered outages),
+join/leave churn mid-session, per-client poses wandering the room (zone
+subscriptions follow), and cross-client queries multiplexed through
+`serving.batching.BatchScheduler` over the multi-query top-k engine.  Each
+client's delivery/ingest/mode step is `core.runtime.ClientSession` — the
+same code path as the single-client example.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.knobs import Knobs
+from repro.core.runtime import ClientSession, DeviceClient, NetworkModel
+from repro.core.store import ObjectStore
+from repro.server.session import FleetPacket, SessionManager
+from repro.server.zones import ZoneGrid, ZoneShardedStore
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class FleetServer:
+    """Zone-sharded store + per-zone multi-client sync sessions."""
+    knobs: Knobs
+    embed_dim: int
+    n_clients: int
+    grid: ZoneGrid
+    budget: int = 64                   # per-client objects per tick per zone
+    zoned: ZoneShardedStore = None
+    sessions: list = field(default_factory=list)   # one SessionManager/zone
+    subscribed: np.ndarray = None      # [C, Z] bool (host mirror)
+
+    def __post_init__(self):
+        if self.zoned is None:
+            self.zoned = ZoneShardedStore(knobs=self.knobs,
+                                          embed_dim=self.embed_dim,
+                                          grid=self.grid)
+        if not self.sessions:
+            self.sessions = [
+                SessionManager(knobs=self.knobs, n_clients=self.n_clients,
+                               capacity=self.zoned.zone_capacity,
+                               budget=self.budget,
+                               subscribed=np.zeros((self.n_clients,), bool))
+                for _ in range(self.grid.n_zones)]
+        if self.subscribed is None:
+            self.subscribed = np.zeros((self.n_clients, self.grid.n_zones),
+                                       bool)
+
+    # -- control plane -----------------------------------------------------
+    def refresh(self, store: ObjectStore):
+        """Mirror the mapping frontend's store into the zone shards; freed
+        shard slots reset every client's sync version there (slot reuse
+        must not hide the next occupant behind a stale synced_version),
+        and zones with any copied/freed rows are marked dirty."""
+        freed, changed = self.zoned.refresh_from(store)
+        for z in range(self.grid.n_zones):
+            if freed[z]:
+                self.sessions[z].reset_slots(freed[z])
+            elif changed[z]:
+                self.sessions[z].dirty = True
+
+    def set_client_pose(self, c: int, pos, radius: float):
+        subs = self.zoned.subscriptions(pos, radius)
+        self.subscribed[c] = subs
+        for z in range(self.grid.n_zones):
+            self.sessions[z].set_client(c, user_pos=pos, subscribed=subs[z])
+
+    def join(self, c: int, pos, radius: float):
+        for s in self.sessions:
+            s.reset_client(c)
+        self.set_client_pose(c, pos, radius)
+
+    def leave(self, c: int):
+        self.subscribed[c] = False
+        for s in self.sessions:
+            s.set_client(c, subscribed=False)
+
+    # -- hot path ------------------------------------------------------------
+    def tick(self, deliverable: np.ndarray) -> list:
+        """One fleet update tick: one vmapped collect per DIRTY zone that
+        has a deliverable subscriber.  A zone is clean (skipped outright)
+        when its last collect covered every subscriber and shipped nothing,
+        and no refresh/join/subscription change has touched it since —
+        idle-tick cost scales with changed zones, not zone count.  Returns
+        [(zone, FleetPacket)] — per-client packets are leading-dim views.
+        """
+        out = []
+        for z, sess in enumerate(self.sessions):
+            if not sess.dirty or not (sess.subscribed & deliverable).any():
+                continue
+            out.append((z, sess.collect(self.zoned.zones[z],
+                                        deliverable=deliverable)))
+        return out
+
+    def per_client_nbytes(self, packets: list) -> np.ndarray:
+        total = np.zeros((self.n_clients,), np.int64)
+        for _, pkt in packets:
+            total += pkt.nbytes
+        return total
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class SimClient:
+    cid: int
+    session: ClientSession
+    anchor: np.ndarray                 # wander center
+    radius: float                      # zone-subscription radius
+    join_tick: int = 0
+    leave_tick: int = 10**9
+    active: bool = False
+    queries: int = 0
+    lq_ticks: int = 0
+
+    def pose_at(self, t: float) -> np.ndarray:
+        ang = 0.15 * t + 0.7 * self.cid
+        return self.anchor + np.array([0.8 * np.cos(ang), 0.0,
+                                       0.8 * np.sin(ang)], np.float32)
+
+
+def _heterogeneous_net(rng, tick_s: float, n_ticks: int) -> NetworkModel:
+    """Mixed-quality links (paper Sec. 4.3 regimes) + staggered outages."""
+    rtt = float(rng.choice([20.0, 40.0, 66.0]))
+    bw = float(rng.choice([50.0, 100.0, 200.0]))
+    outages = ()
+    if rng.random() < 0.5:
+        start = float(rng.uniform(0, n_ticks * tick_s * 0.8))
+        outages = ((start, start + float(rng.uniform(1, 4) * tick_s)),)
+    return NetworkModel(rtt_ms=rtt, bandwidth_mbps=bw, outages=outages)
+
+
+@dataclass
+class FleetSimulator:
+    """Drive C simulated clients against one mapped scene for N ticks."""
+    knobs: Knobs
+    embed_dim: int
+    n_clients: int = 16
+    grid: ZoneGrid = None
+    budget: int = 32
+    seed: int = 0
+    tick_s: float = 1.0
+    churn: float = 0.25                # fraction of clients that join late
+    query_prob: float = 0.5
+    server: FleetServer = None
+    clients: list = field(default_factory=list)
+    scheduler: object = None
+    stats: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.grid is None:
+            self.grid = ZoneGrid.for_room(8.0, nx=2, nz=2)
+        if self.server is None:
+            self.server = FleetServer(knobs=self.knobs,
+                                      embed_dim=self.embed_dim,
+                                      n_clients=self.n_clients,
+                                      grid=self.grid, budget=self.budget)
+
+    def _build_clients(self, n_ticks: int):
+        rng = np.random.default_rng(self.seed)
+        half = self.grid.zone_size * max(self.grid.nx, self.grid.nz) / 2
+        self.clients = []
+        for c in range(self.n_clients):
+            dev = DeviceClient(knobs=self.knobs, embed_dim=self.embed_dim)
+            net = _heterogeneous_net(rng, self.tick_s, n_ticks)
+            anchor = np.array([rng.uniform(-half * 0.8, half * 0.8), 1.5,
+                               rng.uniform(-half * 0.8, half * 0.8)],
+                              np.float32)
+            join = 0
+            leave = 10**9
+            if rng.random() < self.churn:
+                join = int(rng.integers(1, max(n_ticks // 2, 2)))
+            if rng.random() < self.churn / 2:
+                leave = int(rng.integers(n_ticks // 2, n_ticks))
+            self.clients.append(SimClient(
+                cid=c, session=ClientSession(dev=dev, net=net,
+                                             knobs=self.knobs,
+                                             dt=self.tick_s),
+                anchor=anchor, radius=1.5, join_tick=join, leave_tick=leave))
+
+    def _build_scheduler(self, get_map):
+        from repro.serving.batching import BatchScheduler, make_query_step_fn
+        bs = max(4, min(self.n_clients, 16))
+        return BatchScheduler(batch_size=bs,
+                              step_fn=make_query_step_fn(get_map, pad_to=bs))
+
+    def run(self, *, n_ticks: int = 30, mapper=None, frames=None,
+            embedder=None, classes=None, key=None) -> dict:
+        """Run the fleet.  ``mapper`` + ``frames`` drive the mapping
+        frontend; pass mapper=None with a pre-filled store via
+        ``self.server.refresh(store)`` inside a custom loop instead."""
+        self._build_clients(n_ticks)
+        self.scheduler = self._build_scheduler(
+            lambda: mapper.store if mapper else None)
+        frames = list(frames) if frames is not None else []
+        key = key if key is not None else jax.random.key(self.seed)
+
+        tick_lat, down_total, hedges0 = [], 0, self.scheduler.hedge_count
+        for i in range(n_ticks):
+            t = i * self.tick_s
+            active_labels = np.zeros((0,), np.int32)
+            if mapper is not None:
+                if i < len(frames):
+                    mapper.process_frame(frames[i], classes,
+                                         jax.random.fold_in(key, i))
+                    self.server.refresh(mapper.store)
+                active_labels = np.asarray(mapper.store.label)[
+                    np.asarray(mapper.store.active)]
+
+            # churn + pose advance
+            deliverable = np.zeros((self.n_clients,), bool)
+            for cl in self.clients:
+                if not cl.active and cl.join_tick <= i < cl.leave_tick:
+                    cl.active = True
+                    self.server.join(cl.cid, cl.pose_at(t), cl.radius)
+                elif cl.active and i >= cl.leave_tick:
+                    cl.active = False
+                    self.server.leave(cl.cid)
+                if cl.active:
+                    pos = cl.pose_at(t)
+                    cl.session.user_pos = jnp.asarray(pos)
+                    self.server.set_client_pose(cl.cid, pos, cl.radius)
+                    deliverable[cl.cid] = cl.session.net.is_up(t)
+
+            t0 = time.perf_counter()
+            packets = self.server.tick(deliverable)
+            tick_lat.append((time.perf_counter() - t0) * 1e3)
+
+            # client side: shared per-tick step (delivery + ingest + mode)
+            per_client = self.server.per_client_nbytes(packets)
+            down_total += int(per_client.sum())
+            for cl in self.clients:
+                if not cl.active:
+                    continue
+                mode = None
+                for _, pkt in packets:
+                    mode = cl.session.step(t, pkt.packet_for(cl.cid))
+                if mode is None:
+                    mode = cl.session.step(t)
+                # cross-client queries: SQ rides the shared batch scheduler
+                if embedder is not None and len(active_labels) \
+                        and np.random.default_rng(self.seed + i * 131
+                                                  + cl.cid).random() \
+                        < self.query_prob:
+                    cid_q = int(active_labels[(cl.cid + i)
+                                              % len(active_labels)])
+                    if mode == "SQ":
+                        self.scheduler.submit(embedder.embed_text(cid_q))
+                        cl.queries += 1
+                    else:
+                        cl.lq_ticks += 1
+            if mapper is not None:
+                self.scheduler.step()
+
+        if mapper is not None:
+            self.scheduler.drain()      # serve every remaining submission
+        act = [cl for cl in self.clients if cl.active]
+        self.stats = {
+            "n_ticks": n_ticks,
+            "n_clients": self.n_clients,
+            "active_at_end": len(act),
+            "tick_ms_mean": float(np.mean(tick_lat)) if tick_lat else 0.0,
+            "down_bytes_total": down_total,
+            "down_bytes_per_client": down_total / max(self.n_clients, 1),
+            "delivered_packets": sum(c.session.delivered
+                                     for c in self.clients),
+            "delayed_packets": sum(c.session.delayed for c in self.clients),
+            "sq_queries": sum(c.queries for c in self.clients),
+            "lq_fallbacks": sum(c.lq_ticks for c in self.clients),
+            "hedges": self.scheduler.hedge_count - hedges0,
+            "served": len(self.scheduler.done),
+            "unserved": len(self.scheduler.waiting),
+            "dropped_by_full_zone": self.server.zoned.dropped,
+        }
+        return self.stats

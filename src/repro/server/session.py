@@ -1,0 +1,230 @@
+"""Multi-tenant per-client sync: stacked sync vectors, one vmapped collect.
+
+The single-client protocol (core/updates.py) keeps one ``synced_version[N]``
+vector per client and builds each client's packet with a host-side pass over
+the store.  Serving C clients that way costs C Python-loop iterations and C
+dispatches per tick.  Here the fleet's sync state is ONE ``[C, N]`` array
+and the whole tick is one jitted dispatch (`_collect_fleet`):
+
+  changed[C, N]  = active & (obs >= min_obs[c]) & (version > synced[c])
+                   & subscribed-and-deliverable[c]
+  priority[C, N] = vmapped compute_priority over per-client user_pos
+  top-k          = per-client budgeted selection (lax.top_k over the
+                   priority-masked scores; invalid rows sort last, so live
+                   rows form a prefix exactly like the single-client packet)
+  gather         = fused gather+stride-downsample straight from store rows
+                   to the [C, U, Pc, 3] wire tensor (no [C, U, Pserver, 3]
+                   intermediate)
+  sync advance   = vmapped scatter of the shipped versions
+
+Byte accounting matches core/updates.py exactly (same wire format), so the
+fleet packets and single-client packets are interchangeable — asserted in
+tests/test_fleet.py.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import geometry as geo
+from repro.core.knobs import Knobs
+from repro.core.local_map import UpdateBatch, compute_priority
+from repro.core.store import ObjectStore
+from repro.core.updates import _HEADER_B, UpdatePacket
+
+
+class FleetSync(NamedTuple):
+    """Stacked per-client sync vectors: last shipped version per store slot."""
+    synced_version: jax.Array    # [C, N] int32
+
+
+class FleetBatch(NamedTuple):
+    """C clients' update packets as one SoA pytree (leading [C, U] dims)."""
+    oid: jax.Array        # [C, U] int32
+    embed: jax.Array      # [C, U, E] f32
+    label: jax.Array      # [C, U] int32
+    points: jax.Array     # [C, U, Pc, 3] f16
+    n_points: jax.Array   # [C, U] int32
+    centroid: jax.Array   # [C, U, 3] f32
+    version: jax.Array    # [C, U] int32
+    valid: jax.Array      # [C, U] bool — live-row prefix mask per client
+
+
+def _downsample_gather(points: jax.Array, n_points: jax.Array,
+                       idx: jax.Array, budget: int):
+    """Gather store rows ``idx`` [C, U] and stride-downsample to ``budget``
+    in one fused indexing op — identical semantics to geo.downsample
+    composed with the row gather, without materializing [C, U, Pserver, 3].
+    """
+    P = points.shape[1]
+    n = jnp.maximum(n_points[idx], 1)                       # [C, U]
+    ar = jnp.arange(budget)
+    sub = jnp.where(n[..., None] > budget, (ar * n[..., None]) // budget, ar)
+    sub = jnp.minimum(sub, P - 1)                           # [C, U, B]
+    out = points[idx[..., None], sub]                       # [C, U, B, 3]
+    n_out = jnp.minimum(n, budget).astype(jnp.int32)
+    valid = ar < n_out[..., None]
+    return jnp.where(valid[..., None], out, 0.0), n_out
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("budget", "points_budget", "knobs"))
+def _collect_fleet(store: ObjectStore, synced: jax.Array, mask_c: jax.Array,
+                   min_obs: jax.Array, user_pos: jax.Array,
+                   interest_embeds, *, budget: int, points_budget: int,
+                   knobs: Knobs):
+    """One update tick for the whole fleet in a single dispatch.
+
+    Returns (FleetBatch, new_synced [C, N], nbytes [C], counts [C]).
+    """
+    changed = (store.active[None]
+               & (store.obs_count[None] >= min_obs[:, None])
+               & (store.version[None] > synced)
+               & mask_c[:, None])
+    pri = jax.vmap(lambda up: compute_priority(
+        store.embed, store.label, store.centroid, user_pos=up, knobs=knobs,
+        interest_embeds=interest_embeds))(user_pos)          # [C, N]
+    score = jnp.where(changed, pri, -jnp.inf)
+    top, idx = jax.lax.top_k(score, budget)                  # [C, U]
+    valid = jnp.isfinite(top)
+
+    pts, n = _downsample_gather(store.points, store.n_points, idx,
+                                points_budget)
+    cent = jax.vmap(jax.vmap(lambda p, m: geo.centroid_bbox(p, m)[0]))(pts, n)
+    batch = FleetBatch(
+        oid=store.ids[idx], embed=store.embed[idx], label=store.label[idx],
+        points=pts.astype(jnp.float16), n_points=n, centroid=cent,
+        version=store.version[idx], valid=valid)
+
+    N = synced.shape[1]
+    shipped = jnp.where(valid, idx, N)                       # OOB -> dropped
+    new_synced = jax.vmap(
+        lambda s, i, w: s.at[i].set(w, mode="drop"))(
+            synced, shipped, store.version[idx])
+
+    E = store.embed.shape[1]
+    n_live = jnp.where(valid, n, 0)
+    counts = valid.sum(axis=-1).astype(jnp.int32)
+    nbytes = counts * (_HEADER_B + 2 * E) + 6 * n_live.sum(axis=-1)
+    return batch, new_synced, nbytes, counts
+
+
+@dataclass
+class FleetPacket:
+    """One tick's C packets: the FleetBatch plus host-side accounting."""
+    batch: FleetBatch
+    counts: np.ndarray       # [C] live rows per client
+    nbytes: np.ndarray       # [C] exact wire bytes per client
+    tick: int
+
+    @property
+    def total_nbytes(self) -> int:
+        return int(self.nbytes.sum())
+
+    def packet_for(self, c: int) -> UpdatePacket:
+        """Single-client UpdatePacket view (leading-dim slice, no copy on
+        the live path — `DeviceClient.ingest` consumes the batch as-is)."""
+        cnt = int(self.counts[c])
+        if cnt == 0:
+            return UpdatePacket(batch=None, count=0, nbytes=0, tick=self.tick)
+        b = self.batch
+        ub = UpdateBatch(oid=b.oid[c], embed=b.embed[c], label=b.label[c],
+                         points=b.points[c], n_points=b.n_points[c],
+                         centroid=b.centroid[c], version=b.version[c],
+                         valid=b.valid[c])
+        return UpdatePacket(batch=ub, count=cnt, nbytes=int(self.nbytes[c]),
+                            tick=self.tick)
+
+
+@dataclass
+class SessionManager:
+    """C clients' sync state against one store (or one zone shard).
+
+    Per-client knobs live as stacked host arrays (pose, min-obs,
+    subscription); the sync vectors live on device as one [C, N] array.
+    ``collect`` is the fleet hot path: one `_collect_fleet` dispatch for all
+    C clients.  Unsubscribed / undeliverable clients simply don't advance
+    their sync rows, so their next deliverable tick coalesces everything
+    they missed (same semantics as CloudService.flush_buffer).
+    """
+    knobs: Knobs
+    n_clients: int
+    capacity: int                      # N = slot count of the served store
+    budget: int = 64                   # max objects shipped per client/tick
+    sync: FleetSync = None
+    subscribed: np.ndarray = None      # [C] bool
+    user_pos: np.ndarray = None        # [C, 3] f32
+    min_obs: np.ndarray = None         # [C] int32
+    interest_embeds: object = None     # optional [I, E] shared interests
+    tick: int = 0
+    dirty: bool = True                 # False only when the last collect
+    #                                    covered every subscriber and
+    #                                    shipped nothing (fleet quiesced)
+
+    def __post_init__(self):
+        C, N = self.n_clients, self.capacity
+        self.budget = min(self.budget, N)
+        if self.sync is None:
+            self.sync = FleetSync(jnp.zeros((C, N), jnp.int32))
+        if self.subscribed is None:
+            self.subscribed = np.ones((C,), bool)
+        if self.user_pos is None:
+            self.user_pos = np.zeros((C, 3), np.float32)
+        if self.min_obs is None:
+            self.min_obs = np.full((C,), self.knobs.min_obs_before_sync,
+                                   np.int32)
+
+    # -- per-client knob management (control plane, off the hot path) ------
+    def set_client(self, c: int, *, user_pos=None, min_obs=None,
+                   subscribed=None):
+        if user_pos is not None:
+            self.user_pos[c] = np.asarray(user_pos, np.float32)
+        if min_obs is not None:
+            if int(min_obs) != int(self.min_obs[c]):
+                self.dirty = True      # eligibility changed: re-collect
+            self.min_obs[c] = int(min_obs)
+        if subscribed is not None:
+            if bool(subscribed) != bool(self.subscribed[c]):
+                self.dirty = True      # membership changed: re-collect
+            self.subscribed[c] = bool(subscribed)
+
+    def reset_client(self, c: int):
+        """Fresh join: zero the sync row so the next tick ships a full
+        catch-up of the subscribed store."""
+        self.dirty = True
+        self.sync = FleetSync(self.sync.synced_version.at[c].set(0))
+
+    def reset_slots(self, slots):
+        """Store slots were freed/reassigned (zone shard slot reuse): forget
+        every client's synced version there so a future occupant ships."""
+        if len(slots):
+            self.dirty = True
+            self.sync = FleetSync(
+                self.sync.synced_version.at[:, np.asarray(slots)].set(0))
+
+    # -- hot path ----------------------------------------------------------
+    def collect(self, store: ObjectStore, *,
+                deliverable: np.ndarray | None = None) -> FleetPacket:
+        """One fleet update tick: ONE jitted dispatch for all C clients."""
+        mask = self.subscribed if deliverable is None \
+            else self.subscribed & np.asarray(deliverable, bool)
+        batch, new_synced, nbytes, counts = _collect_fleet(
+            store, self.sync.synced_version, jnp.asarray(mask),
+            jnp.asarray(self.min_obs), jnp.asarray(self.user_pos),
+            self.interest_embeds, budget=self.budget,
+            points_budget=self.knobs.max_object_points_client,
+            knobs=self.knobs)
+        self.sync = FleetSync(new_synced)
+        pkt = FleetPacket(batch=batch, counts=np.asarray(counts),
+                          nbytes=np.asarray(nbytes), tick=self.tick)
+        self.tick += 1
+        # quiesced iff every subscriber was covered and nothing shipped
+        # (a partial-coverage tick may still owe undeliverable clients)
+        self.dirty = bool(pkt.counts.any()) or not (mask ==
+                                                    self.subscribed).all()
+        return pkt

@@ -1,0 +1,238 @@
+"""Zone-sharded object store: spatial partition of the server map.
+
+Objects are routed to zones by centroid over a fixed XZ grid; each zone is
+an independent, fixed-capacity `ObjectStore` shard, so per-zone work
+(per-client sync, queries) touches only that zone's slots.  Clients
+subscribe to the zones their pose-radius overlaps — a client whose pose
+stays inside one zone receives ZERO downstream bytes for objects mutated
+only in other zones (tests/test_fleet.py asserts this with exact
+`update_nbytes` accounting).
+
+The mapping frontend stays monolithic (association needs the global view);
+``refresh_from`` mirrors its store into the shards incrementally: only rows
+whose version advanced since the last copy are re-scattered (one bucketed
+jitted scatter per dirty zone, not per object).  Slot bookkeeping is
+host-side; freed shard slots are reported so the per-zone SessionManager
+can forget stale sync versions before the slot is reused.
+
+When a device mesh is available the shards are placed round-robin on its
+devices via `distributed.sharding.zone_shard_devices`; on the single-device
+container placement is a no-op.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.knobs import Knobs
+from repro.core.store import ObjectStore, init_store
+from repro.core.updates import _bucket
+
+
+@dataclass(frozen=True)
+class ZoneGrid:
+    """Fixed XZ-plane partition of the mapped space into nx*nz zones."""
+    origin: tuple            # (x0, z0) — min corner of the grid
+    zone_size: float         # zone edge length (metres)
+    nx: int
+    nz: int
+
+    @property
+    def n_zones(self) -> int:
+        return self.nx * self.nz
+
+    @classmethod
+    def for_room(cls, room_size: float, nx: int = 2, nz: int = 2):
+        half = room_size / 2
+        return cls(origin=(-half, -half), zone_size=room_size / max(nx, nz),
+                   nx=nx, nz=nz)
+
+    def zone_of(self, centroids: np.ndarray) -> np.ndarray:
+        """[M, 3] centroids -> [M] zone ids (out-of-grid clamps to edge)."""
+        c = np.atleast_2d(np.asarray(centroids))
+        ix = np.clip(((c[:, 0] - self.origin[0]) // self.zone_size)
+                     .astype(np.int64), 0, self.nx - 1)
+        iz = np.clip(((c[:, 2] - self.origin[1]) // self.zone_size)
+                     .astype(np.int64), 0, self.nz - 1)
+        return ix * self.nz + iz
+
+    def overlaps(self, pos, radius: float) -> np.ndarray:
+        """[Z] bool — zones whose XZ rectangle intersects the pose circle.
+
+        Border zones extend to infinity on their grid-exterior sides,
+        mirroring the clamp in ``zone_of``: an object outside the grid and
+        the client standing next to it land in the same zone."""
+        pos = np.asarray(pos)
+        px, pz = float(pos[0]), float(pos[2])
+        inf = float("inf")
+        out = np.zeros((self.n_zones,), bool)
+        for ix in range(self.nx):
+            for iz in range(self.nz):
+                x0 = self.origin[0] + ix * self.zone_size
+                z0 = self.origin[1] + iz * self.zone_size
+                x1, z1 = x0 + self.zone_size, z0 + self.zone_size
+                if ix == 0:
+                    x0 = -inf
+                if ix == self.nx - 1:
+                    x1 = inf
+                if iz == 0:
+                    z0 = -inf
+                if iz == self.nz - 1:
+                    z1 = inf
+                cx = np.clip(px, x0, x1)
+                cz = np.clip(pz, z0, z1)
+                if (cx - px) ** 2 + (cz - pz) ** 2 <= radius ** 2:
+                    out[ix * self.nz + iz] = True
+        return out
+
+
+@jax.jit
+def _zone_scatter(zone: ObjectStore, src: ObjectStore, g_idx: jax.Array,
+                  z_idx: jax.Array, valid: jax.Array, deact_idx: jax.Array,
+                  deact_valid: jax.Array) -> ObjectStore:
+    """Copy src rows g_idx into zone rows z_idx and deactivate deact_idx —
+    one scatter per field, padding rows dropped via OOB indices."""
+    capz = zone.ids.shape[0]
+    tgt = jnp.where(valid, z_idx, capz)
+    dt = jnp.where(deact_valid, deact_idx, capz)
+
+    def put(zf, sf):
+        return zf.at[tgt].set(sf[g_idx], mode="drop")
+
+    active = zone.active.at[dt].set(False, mode="drop") \
+                        .at[tgt].set(True, mode="drop")
+    return ObjectStore(
+        ids=put(zone.ids, src.ids), active=active,
+        embed=put(zone.embed, src.embed), label=put(zone.label, src.label),
+        points=put(zone.points, src.points),
+        n_points=put(zone.n_points, src.n_points),
+        centroid=put(zone.centroid, src.centroid),
+        bbox_min=put(zone.bbox_min, src.bbox_min),
+        bbox_max=put(zone.bbox_max, src.bbox_max),
+        obs_count=put(zone.obs_count, src.obs_count),
+        version=put(zone.version, src.version),
+        last_seen=put(zone.last_seen, src.last_seen),
+        next_id=zone.next_id)
+
+
+def _pad_idx(vals: list, bucket: int):
+    arr = np.zeros((bucket,), np.int32)
+    arr[:len(vals)] = vals
+    return jnp.asarray(arr), jnp.asarray(np.arange(bucket) < len(vals))
+
+
+@dataclass
+class ZoneShardedStore:
+    """The server map as Z independent ObjectStore shards + host routing."""
+    knobs: Knobs
+    embed_dim: int
+    grid: ZoneGrid
+    zone_capacity: int = 0
+    max_points: int = 0
+    zones: list = field(default_factory=list)
+    _dropped_oids: set = field(default_factory=set)  # refused by full shard
+    _slot: list = field(default_factory=list)   # per zone: {oid -> slot}
+    _ver: list = field(default_factory=list)    # per zone: copied version
+    _free: list = field(default_factory=list)   # per zone: free slot stack
+
+    def __post_init__(self):
+        Z = self.grid.n_zones
+        if not self.zone_capacity:
+            # headroom over an even split so skewed scenes don't overflow
+            self.zone_capacity = max(16, 2 * self.knobs.server_capacity // Z)
+        if not self.max_points:
+            self.max_points = self.knobs.max_object_points_server
+        if not self.zones:
+            self.zones = [init_store(self.zone_capacity, self.embed_dim,
+                                     self.max_points) for _ in range(Z)]
+        else:
+            self.zone_capacity = int(self.zones[0].ids.shape[0])
+        # bookkeeping is rebuilt from the shards' own arrays, so passing
+        # pre-populated zones keeps their occupied slots occupied
+        self._slot, self._ver, self._free = [], [], []
+        for zone in self.zones:
+            act = np.asarray(zone.active)
+            ids = np.asarray(zone.ids)
+            ver = np.asarray(zone.version)
+            occ = np.nonzero(act)[0]
+            self._slot.append({int(ids[s]): int(s) for s in occ})
+            vv = np.full((self.zone_capacity,), -1, np.int64)
+            vv[occ] = ver[occ]
+            self._ver.append(vv)
+            self._free.append([s for s in
+                               range(self.zone_capacity - 1, -1, -1)
+                               if not act[s]])
+
+    # ------------------------------------------------------------------
+    def refresh_from(self, store: ObjectStore):
+        """Mirror the global store into the shards (only version-advanced
+        rows are copied).  Returns (freed_per_zone, changed_per_zone):
+        per-zone lists of freed shard slots — feed these to
+        SessionManager.reset_slots before the slot is reused — and per-zone
+        dirtiness flags so clean zones can skip their next collect.
+        """
+        active = np.asarray(store.active)
+        version = np.asarray(store.version)
+        ids = np.asarray(store.ids)
+        cent = np.asarray(store.centroid)
+        gidx = np.nonzero(active)[0]
+        Z = self.grid.n_zones
+        now = [dict() for _ in range(Z)]
+        if len(gidx):
+            zids = self.grid.zone_of(cent[gidx])
+            for g, z in zip(gidx, zids):
+                now[int(z)][int(ids[g])] = int(g)
+
+        freed_per_zone, changed_per_zone = [], []
+        for z in range(Z):
+            slot = self._slot[z]
+            freed, g_list, s_list = [], [], []
+            for oid in [o for o in slot if o not in now[z]]:
+                s = slot.pop(oid)
+                self._ver[z][s] = -1
+                self._free[z].append(s)
+                freed.append(s)
+            for oid, g in now[z].items():
+                s = slot.get(oid)
+                if s is None:
+                    if not self._free[z]:
+                        self._dropped_oids.add(oid)
+                        continue
+                    s = self._free[z].pop()
+                    slot[oid] = s
+                if self._ver[z][s] != version[g]:
+                    self._ver[z][s] = version[g]
+                    g_list.append(g)
+                    s_list.append(s)
+            freed_per_zone.append(freed)
+            changed_per_zone.append(bool(freed or g_list))
+            if freed or g_list:
+                B = _bucket(max(len(g_list), 1))
+                gb, gv = _pad_idx(g_list, B)
+                sb, _ = _pad_idx(s_list, B)
+                db, dv = _pad_idx(freed, _bucket(max(len(freed), 1)))
+                self.zones[z] = _zone_scatter(self.zones[z], store, gb, sb,
+                                              gv, db, dv)
+        return freed_per_zone, changed_per_zone
+
+    # ------------------------------------------------------------------
+    @property
+    def dropped(self) -> int:
+        """Distinct objects ever refused by a full shard (not retries)."""
+        return len(self._dropped_oids)
+
+    def subscriptions(self, pos, radius: float) -> np.ndarray:
+        return self.grid.overlaps(pos, radius)
+
+    def n_active(self) -> int:
+        return int(sum(int(np.asarray(z.active).sum()) for z in self.zones))
+
+    def place_on(self, mesh) -> None:
+        """Place shard z on mesh device z % ndev (no-op on 1 device)."""
+        from repro.distributed.sharding import zone_shard_devices
+        devs = zone_shard_devices(mesh, len(self.zones))
+        self.zones = [jax.device_put(zone, d)
+                      for zone, d in zip(self.zones, devs)]

@@ -1,0 +1,348 @@
+"""Multi-tenant fleet server: vmapped sync correctness, zone isolation,
+convergence under interleaved ticks/outages/joins, and the smoke-scale
+benchmark suite."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.knobs import Knobs
+from repro.core.local_map import compute_priority
+from repro.core.runtime import ClientSession, DeviceClient, NetworkModel
+from repro.core.store import synthetic_store
+from repro.core.updates import collect_updates, init_sync, update_nbytes
+from repro.server import (FleetServer, FleetSimulator, SessionManager,
+                          ZoneGrid, ZoneShardedStore)
+
+E = 32
+KN = Knobs(server_capacity=64, client_capacity=64,
+           max_object_points_server=64, max_object_points_client=16,
+           min_obs_before_sync=1)
+
+
+def synth_store(n, *, cap=64, P=64, seed=0, x_range=(-4, 4)):
+    return synthetic_store(
+        n, cap, E, P, seed=seed, n_labels=10,
+        centroid_low=(x_range[0], 0.0, -4.0),
+        centroid_high=(x_range[1], 2.0, 4.0))
+
+
+def bump_versions(store, slots):
+    """Mutate objects in-place: version advance (new geometry angle)."""
+    slots = jnp.asarray(np.asarray(slots, np.int64))
+    return store._replace(version=store.version.at[slots].add(1))
+
+
+# ---------------------------------------------------------------------------
+def test_fleet_collect_matches_single_client():
+    """One vmapped dispatch for C clients == C single-client collect_updates
+    calls: same object sets, same exact wire bytes, per client."""
+    store = synth_store(30)
+    C, budget = 5, 16
+    rng = np.random.default_rng(1)
+    poses = rng.uniform(-3, 3, size=(C, 3)).astype(np.float32)
+    sm = SessionManager(knobs=KN, n_clients=C, capacity=KN.server_capacity,
+                        budget=budget, user_pos=poses.copy())
+    # desync some rows so clients differ: client c already has objects c..c+4
+    synced = np.zeros((C, KN.server_capacity), np.int32)
+    for c in range(C):
+        synced[c, c:c + 5] = 1
+    sm.sync = sm.sync._replace(synced_version=jnp.asarray(synced))
+
+    pkt = sm.collect(store)
+    for c in range(C):
+        pri = np.asarray(compute_priority(
+            store.embed, store.label, store.centroid,
+            user_pos=jnp.asarray(poses[c]), knobs=KN))
+        single, _ = collect_updates(
+            store, init_sync(KN.server_capacity)._replace(
+                synced_version=synced[c].copy()),
+            KN, tick=0, priorities=pri, max_updates=budget)
+        assert single.nbytes == int(pkt.nbytes[c])
+        assert single.count == int(pkt.counts[c])
+        got = set(np.asarray(pkt.batch.oid[c])[:pkt.counts[c]].tolist())
+        assert got == {int(u.oid) for u in single.updates}
+        # byte-for-byte payload equality: every field of every row matches
+        # the single-client packet (match rows by oid — ordering may
+        # differ only among equal priorities)
+        cnt = int(pkt.counts[c])
+        fleet_row = {int(o): i for i, o in
+                     enumerate(np.asarray(pkt.batch.oid[c])[:cnt])}
+        for u in single.updates:
+            i = fleet_row[int(u.oid)]
+            for field in ("embed", "label", "points", "n_points",
+                          "centroid", "version"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(pkt.batch, field)[c, i]),
+                    np.asarray(getattr(u, field)), err_msg=field)
+    # budget-limited catch-up: later ticks drain the remainder, then the
+    # fleet quiesces to zero bytes
+    shipped = [set(np.asarray(pkt.batch.oid[c])[:pkt.counts[c]].tolist())
+               for c in range(C)]
+    for _ in range(5):
+        nxt = sm.collect(store)
+        if (nxt.counts == 0).all():
+            break
+        for c in range(C):
+            shipped[c] |= set(
+                np.asarray(nxt.batch.oid[c])[:nxt.counts[c]].tolist())
+    pkt2 = sm.collect(store)
+    assert (pkt2.nbytes == 0).all() and (pkt2.counts == 0).all()
+    for c in range(C):                     # every changed object arrived
+        expect = {int(o) for s, o in enumerate(np.asarray(store.ids)[:30])
+                  if synced[c][s] < 1}
+        assert shipped[c] == expect
+
+
+def test_fleet_sync_advances_only_when_deliverable():
+    """A client in outage keeps its sync row; reconnection coalesces every
+    missed change into one packet (flush_buffer semantics, fleet-wide)."""
+    store = synth_store(10)
+    sm = SessionManager(knobs=KN, n_clients=2, capacity=KN.server_capacity,
+                        budget=16)
+    p0 = sm.collect(store, deliverable=np.array([True, False]))
+    assert p0.counts[0] == 10 and p0.counts[1] == 0
+    store = bump_versions(store, [0, 1])
+    p1 = sm.collect(store, deliverable=np.array([True, True]))
+    assert p1.counts[0] == 2          # only the delta
+    assert p1.counts[1] == 10         # full coalesced catch-up
+    assert int(p1.nbytes[1]) > int(p1.nbytes[0])
+
+
+def test_zone_isolation_exact_bytes():
+    """Acceptance: a client whose pose stays in one zone receives NO bytes
+    for objects mutated only in other zones — exact update_nbytes
+    accounting."""
+    grid = ZoneGrid.for_room(8.0, nx=2, nz=1)   # zone 0: x<0, zone 1: x>=0
+    store = synth_store(20, seed=3)
+    fs = FleetServer(knobs=KN, embed_dim=E, n_clients=2, grid=grid,
+                     budget=32)
+    fs.refresh(store)
+    fs.join(0, np.array([-2.0, 1.5, 0.0]), 1.0)   # client 0: zone 0 only
+    fs.join(1, np.array([2.0, 1.5, 0.0]), 1.0)    # client 1: zone 1 only
+    assert fs.subscribed[0].tolist() == [True, False]
+    assert fs.subscribed[1].tolist() == [False, True]
+    both = np.array([True, True])
+    fs.tick(both)                                  # initial sync
+
+    # mutate ONLY zone-1 objects (centroid x >= 0)
+    cents = np.asarray(store.centroid)
+    act = np.asarray(store.active)
+    z1_slots = np.nonzero(act & (cents[:, 0] >= 0))[0]
+    assert len(z1_slots) > 0
+    store = bump_versions(store, z1_slots)
+    fs.refresh(store)
+    packets = fs.tick(both)
+    per = fs.per_client_nbytes(packets)
+    assert per[0] == 0                             # zone-0 client: zero bytes
+    # zone-1 client: exactly the mutated objects at exact wire size
+    n_pts = np.asarray(store.n_points)[z1_slots]
+    expect = sum(update_nbytes(E, min(int(n), KN.max_object_points_client))
+                 for n in n_pts)
+    assert per[1] == expect
+
+
+def test_zone_slot_reuse_resets_sync():
+    """A freed shard slot must not hide its next occupant behind the old
+    occupant's synced version."""
+    grid = ZoneGrid(origin=(-4.0, -4.0), zone_size=8.0, nx=1, nz=1)
+    store = synth_store(3, seed=5)
+    zoned = ZoneShardedStore(knobs=KN, embed_dim=E, grid=grid,
+                             zone_capacity=4)
+    fs = FleetServer(knobs=KN, embed_dim=E, n_clients=1, grid=grid,
+                     budget=8, zoned=zoned)
+    fs.refresh(store)
+    fs.join(0, np.zeros(3), 1.0)
+    fs.tick(np.array([True]))
+    # retire object at slot 0, then add a NEW object with a LOWER version
+    store = store._replace(active=store.active.at[0].set(False))
+    fs.refresh(store)                               # frees the shard slot
+    store = store._replace(
+        active=store.active.at[0].set(True),
+        ids=store.ids.at[0].set(99),
+        version=store.version.at[0].set(1))         # version 1 <= synced 1
+    fs.refresh(store)
+    packets = fs.tick(np.array([True]))
+    oids = set()
+    for _, pkt in packets:
+        p = pkt.packet_for(0)
+        if p.count:
+            oids |= {int(u.oid) for u in p.updates}
+    assert 99 in oids
+
+
+def test_quiesced_zones_skip_collect():
+    """Once a zone's subscribers are fully synced, idle ticks dispatch
+    nothing for it; a refresh with changes makes it collect again."""
+    grid = ZoneGrid.for_room(8.0, nx=2, nz=1)
+    store = synth_store(12, seed=9)
+    fs = FleetServer(knobs=KN, embed_dim=E, n_clients=2, grid=grid,
+                     budget=32)
+    fs.refresh(store)
+    fs.join(0, np.array([-2.0, 1.5, 0.0]), 1.0)
+    fs.join(1, np.array([2.0, 1.5, 0.0]), 1.0)
+    both = np.array([True, True])
+    assert len(fs.tick(both)) == 2                 # initial catch-up
+    assert len(fs.tick(both)) == 2                 # quiescing tick (0 bytes)
+    assert fs.tick(both) == []                     # quiesced: no dispatches
+    cents = np.asarray(store.centroid)
+    z1 = np.nonzero(np.asarray(store.active) & (cents[:, 0] >= 0))[0]
+    store = bump_versions(store, z1[:1])
+    fs.refresh(store)
+    ticked = fs.tick(both)
+    assert [z for z, _ in ticked] == [1]           # only the dirty zone
+    # zone-1's subscriber in outage: skipped this tick but still dirty
+    assert fs.tick(np.array([True, False])) == []
+    assert [z for z, _ in fs.tick(both)] == [1]    # quiescing tick
+    assert fs.tick(both) == []
+
+
+# ---------------------------------------------------------------------------
+def _expected_visible(fs, min_obs):
+    """Oracle: (oid -> version) of the server store restricted to a zone
+    subscription, transient-filtered — what a synced client must hold."""
+    out = {}
+    for z, zone in enumerate(fs.zoned.zones):
+        act = np.asarray(zone.active)
+        obs = np.asarray(zone.obs_count)
+        ids = np.asarray(zone.ids)
+        ver = np.asarray(zone.version)
+        for s in np.nonzero(act & (obs >= min_obs))[0]:
+            out.setdefault(z, {})[int(ids[s])] = int(ver[s])
+    return out
+
+
+def test_multi_client_convergence_under_interleaving():
+    """After an arbitrary interleaving of ticks, outages, joins, and store
+    mutations, every client's local map converges to the server store
+    restricted to its subscribed zones (settle ticks with the network up)."""
+    rng = np.random.default_rng(11)
+    grid = ZoneGrid.for_room(8.0, nx=2, nz=1)
+    kn = Knobs(server_capacity=64, client_capacity=64,
+               max_object_points_server=32, max_object_points_client=16,
+               min_obs_before_sync=1)
+    C = 4
+    store = synth_store(12, P=32, seed=7)
+    n_next = 12
+    fs = FleetServer(knobs=kn, embed_dim=E, n_clients=C, grid=grid,
+                     budget=16)
+    # fixed per-client poses -> static zone subscriptions (no removals, no
+    # zone moves in this scenario, so set equality is exact)
+    poses = np.array([[-2.5, 1.5, 0.0], [2.5, 1.5, 0.0],
+                      [-1.0, 1.5, 1.0], [1.5, 1.5, -1.0]], np.float32)
+    sessions = [ClientSession(
+        dev=DeviceClient(knobs=kn, embed_dim=E),
+        net=NetworkModel(), knobs=kn, user_pos=jnp.asarray(poses[c]))
+        for c in range(C)]
+    joined = np.zeros(C, bool)
+    fs.refresh(store)
+
+    def run_tick(t, deliverable):
+        packets = fs.tick(deliverable & joined)
+        total = 0
+        for c in range(C):
+            if not joined[c]:
+                continue
+            for _, pkt in packets:
+                sessions[c].step(t, pkt.packet_for(c))
+            total += sum(int(pkt.nbytes[c]) for _, pkt in packets)
+        return total
+
+    fs.join(0, poses[0], 1.2)
+    joined[0] = True
+    for t in range(24):
+        ev = rng.random()
+        if ev < 0.3:                      # mutate some existing objects
+            slots = rng.choice(np.nonzero(np.asarray(store.active))[0],
+                               size=3, replace=False)
+            store = bump_versions(store, slots)
+        elif ev < 0.5 and n_next < 40:    # new object appears
+            s = n_next
+            n_next += 1
+            emb = rng.normal(size=(E,)).astype(np.float32)
+            store = store._replace(
+                ids=store.ids.at[s].set(s + 1),
+                active=store.active.at[s].set(True),
+                embed=store.embed.at[s].set(emb / np.linalg.norm(emb)),
+                centroid=store.centroid.at[s].set(
+                    rng.uniform(-3, 3, 3).astype(np.float32)),
+                n_points=store.n_points.at[s].set(8),
+                obs_count=store.obs_count.at[s].set(2),
+                version=store.version.at[s].set(1))
+        elif ev < 0.7:                    # a client joins mid-session
+            c = int(rng.integers(0, C))
+            if not joined[c]:
+                fs.join(c, poses[c], 1.2)
+                joined[c] = True
+        fs.refresh(store)
+        deliverable = rng.random(C) > 0.35          # random outages
+        run_tick(float(t), deliverable)
+
+    for c in range(C):                    # everyone in by settle time
+        if not joined[c]:
+            fs.join(c, poses[c], 1.2)
+            joined[c] = True
+    up = np.ones(C, bool)
+    t = 24.0
+    for _ in range(10):                   # settle: all links up, no changes
+        if run_tick(t, up) == 0:
+            break
+        t += 1.0
+    assert run_tick(t + 1.0, up) == 0     # quiesced
+
+    by_zone = _expected_visible(fs, kn.min_obs_before_sync)
+    for c in range(C):
+        subs = np.nonzero(fs.subscribed[c])[0]
+        assert len(subs) > 0
+        expect = {}
+        for z in subs:
+            expect.update(by_zone.get(int(z), {}))
+        m = sessions[c].dev.local
+        act = np.asarray(m.active)
+        got = {int(i): int(v) for i, v in
+               zip(np.asarray(m.ids)[act], np.asarray(m.version)[act])}
+        assert got == expect, f"client {c}: {got} != {expect}"
+
+
+# ---------------------------------------------------------------------------
+def test_fleet_simulator_smoke():
+    """The full driver runs: churn + outages + zone routing + batched
+    queries; per-client byte accounting is consistent."""
+    kn = Knobs(server_capacity=64, client_capacity=32,
+               max_object_points_server=64, max_object_points_client=16,
+               max_detections_per_frame=8, min_obs_before_sync=1)
+    from repro.core import MappingServer
+    from repro.data.scenes import make_scene, scene_stream
+    from repro.perception.embedder import OracleEmbedder
+    emb = OracleEmbedder(embed_dim=E)
+    scene = make_scene(n_objects=10, seed=2)
+    classes = {o.oid: o.class_id for o in scene.objects}
+    mapper = MappingServer(knobs=kn, embedder=emb)
+    frames = list(scene_stream(scene, n_frames=40, keyframe_interval=5,
+                               h=60, w=80))
+    sim = FleetSimulator(knobs=kn, embed_dim=E, n_clients=6, seed=3,
+                         grid=ZoneGrid.for_room(scene.room_size, 2, 2))
+    stats = sim.run(n_ticks=8, mapper=mapper, frames=frames, embedder=emb,
+                    classes=classes)
+    assert stats["down_bytes_total"] >= 0
+    per = sum(c.session.down_bytes for c in sim.clients)
+    assert per <= stats["down_bytes_total"]   # in-flight may lag delivery
+    assert stats["served"] == stats["sq_queries"]   # full drain: no backlog
+    assert stats["unserved"] == 0
+    assert stats["dropped_by_full_zone"] == 0
+
+
+@pytest.mark.slow
+def test_bench_fleet_scale_smoke():
+    """tier-1-adjacent smoke of the fleet_scale suite (C=2, tiny shapes)."""
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks import fleet_scale
+    res = fleet_scale.run(smoke=True)
+    assert set(res["sweep"]) == {"1", "2"}
+    for r in res["sweep"].values():
+        assert r["tick_ms"] > 0 and r["per_client_bytes"] > 0
+    # both clients receive identical bytes (same subscription, same map)
+    b = [r["per_client_bytes"] for r in res["sweep"].values()]
+    assert b[0] == b[1]

@@ -1,0 +1,115 @@
+"""NetworkModel in-flight semantics: a transfer whose window straddles an
+outage start is delayed (stalls through the outage), never delivered at
+pre-outage latency.  Regression for the seed behavior where delivery only
+checked link state at send time."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.knobs import Knobs
+from repro.core.runtime import ClientSession, DeviceClient, NetworkModel
+from repro.core.store import init_store
+from repro.core.updates import collect_updates, init_sync
+
+KN = Knobs(server_capacity=32, client_capacity=32,
+           max_object_points_server=32, max_object_points_client=16,
+           min_obs_before_sync=1)
+
+
+def _net(**kw):
+    base = dict(rtt_ms=100.0, bandwidth_mbps=0.008, outages=((4.0, 8.0),))
+    base.update(kw)
+    return NetworkModel(**base)
+
+
+def test_clear_window_delivers_at_nominal_latency():
+    net = _net()
+    # 1 kB at 8 kbps = 1 s + 0.1 s rtt; window [1.0, 2.1] clears the outage
+    assert np.isclose(net.delivery_time(1.0, 1000), 2.1)
+
+
+def test_straddling_transfer_stalls_through_outage():
+    net = _net()
+    # sent at t=3.5: 0.5 s progresses before the outage at 4.0, the
+    # remaining 0.6 s resumes at 8.0 -> delivered 8.6, NOT 4.6
+    at = net.delivery_time(3.5, 1000)
+    assert np.isclose(at, 8.6), at
+    assert at > 8.0
+
+
+def test_send_during_outage_is_not_in_flight():
+    assert _net().delivery_time(5.0, 1000) is None
+
+
+def test_back_to_back_outages_accumulate():
+    net = _net(outages=((4.0, 8.0), (8.5, 10.0)))
+    # sent 3.5: 0.5 s before first outage, 0.5 s in (8.0, 8.5), remaining
+    # 0.1 s after 10.0 -> 10.1
+    assert np.isclose(net.delivery_time(3.5, 1000), 10.1)
+
+
+def test_delivery_is_fifo_per_link():
+    """A packet sent while an older one is still in flight queues behind it
+    — a newer-version update can never be overtaken and then overwritten
+    when the stale packet matures."""
+    store = init_store(KN.server_capacity, 8, KN.max_object_points_server)
+    store = store._replace(
+        ids=store.ids.at[0].set(7), active=store.active.at[0].set(True),
+        embed=store.embed.at[0].set(jnp.ones(8) / np.sqrt(8.0)),
+        n_points=store.n_points.at[0].set(4),
+        obs_count=store.obs_count.at[0].set(3),
+        version=store.version.at[0].set(1))
+    sync = init_sync(KN.server_capacity)
+    pkt_v1, sync = collect_updates(store, sync, KN, tick=0)
+    store = store._replace(version=store.version.at[0].set(2))
+    pkt_v2, _ = collect_updates(store, sync, KN, tick=1)
+    assert pkt_v1.count == 1 and pkt_v2.count == 1
+
+    net = _net(rtt_ms=0.0, bandwidth_mbps=pkt_v1.nbytes * 8 / 1e6)  # 1 s xfer
+    sess = ClientSession(dev=DeviceClient(knobs=KN, embed_dim=8), net=net,
+                         knobs=KN, dt=1.0)
+    sess.step(3.5, pkt_v1)            # straddles the outage: in flight @8.5
+    sess.step(8.0, pkt_v2)            # link up again, but v1 still in
+    assert sess.delivered == 0        # flight: v2 queues behind it (FIFO)
+    assert len(sess.pending) == 2
+    sess.step(12.0)                   # both matured, in send order
+    assert sess.delivered == 2
+    assert int(sess.dev.local.version[0]) == 2   # newest version wins
+
+
+def test_retransmit_walks_adjacent_outages():
+    """Sending inside an outage that abuts another must not crash; the
+    retransmit lands after the last adjacent window."""
+    net = _net(outages=((4.0, 8.0), (8.0, 10.0)))
+    sess = ClientSession(dev=DeviceClient(knobs=KN, embed_dim=8), net=net,
+                         knobs=KN, dt=1.0)
+
+    class _Pkt:            # stand-in with the UpdatePacket delivery fields
+        count, nbytes, batch, tick = 1, 100, None, 0
+    sess.step(5.0, _Pkt())            # mid-outage send: queued, no TypeError
+    assert sess.delayed == 1 and sess.pending[0][0] >= 10.0
+
+
+def test_client_session_defers_straddled_packet():
+    """The shared per-tick step holds a straddled packet in flight and
+    ingests it only after the outage ends."""
+    store = init_store(KN.server_capacity, 8, KN.max_object_points_server)
+    store = store._replace(
+        ids=store.ids.at[0].set(7), active=store.active.at[0].set(True),
+        embed=store.embed.at[0].set(jnp.ones(8) / np.sqrt(8.0)),
+        n_points=store.n_points.at[0].set(4),
+        obs_count=store.obs_count.at[0].set(3),
+        version=store.version.at[0].set(1))
+    pkt, _ = collect_updates(store, init_sync(KN.server_capacity), KN,
+                             tick=0)
+    assert pkt.count == 1
+    net = _net(rtt_ms=0.0, bandwidth_mbps=pkt.nbytes * 8 / 1e6)  # 1 s xfer
+    sess = ClientSession(dev=DeviceClient(knobs=KN, embed_dim=8), net=net,
+                         knobs=KN, dt=1.0)
+    sess.step(3.5, pkt)                       # straddles the 4.0 outage
+    assert sess.delayed == 1 and sess.down_bytes == 0
+    assert int(sess.dev.local.active.sum()) == 0
+    sess.step(5.0)                            # still down: nothing arrives
+    assert sess.down_bytes == 0
+    sess.step(9.0)                            # past 8.5 delivery: ingested
+    assert sess.down_bytes == pkt.nbytes
+    assert int(sess.dev.local.active.sum()) == 1
