@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import Knobs, MappingServer
-from repro.core.query import query_server
+from repro.core.query import Query, execute_query
 from repro.data.scenes import make_scene, scene_stream
 from repro.perception.embedder import OracleEmbedder
 
@@ -66,7 +66,7 @@ def semantic_quality(srv, emb, scene) -> dict:
 
     per_class_acc, weights, ious = [], [], []
     for cid, objs in gt_by_class.items():
-        res = query_server(srv.store, emb.embed_text(cid))
+        res = execute_query(srv.store, Query(embed=emb.embed_text(cid), k=5))
         slot = int(np.asarray(res.slots[0]))
         ok = act[slot] and labels[slot] == cid
         per_class_acc.append(float(ok))

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from benchmarks.common import csv_row
 from repro.core.knobs import Knobs
 from repro.core.local_map import init_local_map, local_map_nbytes
-from repro.core.query import query_local
+from repro.core.query import Query, execute_query
 
 EDIM = 512
 TEXT_EMBED_MS = 45.0      # paper-reported MobileCLIP text encode on device
@@ -46,8 +46,8 @@ def run(full: bool = False, use_pallas: bool = False):
         m = _filled_map(n, kn)
         mem_mb = local_map_nbytes(m) / 2**20
         q = jax.random.normal(jax.random.key(1), (EDIM,))
-        fn = jax.jit(lambda mm, qq: query_local(mm, qq,
-                                                use_pallas=use_pallas))
+        fn = jax.jit(lambda mm, qq: execute_query(
+            mm, Query(embed=qq, k=5), use_pallas=use_pallas))
         jax.block_until_ready(fn(m, q).scores)      # warm
         reps = 20
         t0 = time.perf_counter()

@@ -1,0 +1,113 @@
+"""Declarative query-engine latency vs map size and predicate mix.
+
+The paper's query-latency claim (Fig. 4 / Sec. 2.3.2): the server answers
+open-vocabulary map queries in well under 100 ms at 10,000 objects.  This
+suite measures the compiled engine (`core.query.compile_query`) over
+synthetic stores of 1k / 10k / 30k objects, across predicate mixes:
+
+  embed_only      cosine top-k, the seed query path's workload
+  embed_spatial   + radius-around-user with proximity score combination
+  embed_attrs     + label set, min point count, min obs, recency
+  full_mix        everything at once (spatial + attributes + zones)
+  spatial_only    no embedding at all — pure predicate search
+
+Predicates are fused into the top-k dispatch as -inf score injection, so
+the acceptance target is predicate-heavy latency within 1.2x of
+embed_only at 10k objects (`fused_within_1_2x` in the JSON) — the
+predicates ride the same sweep, not a second pass.  A `batched16` row
+measures the serving amortization: 16 stacked queries in one dispatch.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.core.query import Query, compile_query
+from repro.core.store import synthetic_store
+
+EDIM = 256
+K = 10
+GRID = (-8.0, -8.0, 8.0, 2, 2)          # (x0, z0, zone_size, nx, nz)
+
+
+def _specs(qe, center):
+    radius = jnp.asarray(4.0, jnp.float32)
+    return {
+        "embed_only": Query(embed=qe, k=K),
+        "embed_spatial": Query(embed=qe, near=(center, radius),
+                               prox_weight=jnp.asarray(0.2, jnp.float32),
+                               k=K),
+        "embed_attrs": Query(embed=qe, labels=tuple(range(10)),
+                             min_points=jnp.asarray(4, jnp.int32),
+                             min_obs=jnp.asarray(1, jnp.int32),
+                             since=jnp.asarray(0, jnp.int32), k=K),
+        "full_mix": Query(embed=qe, near=(center, radius),
+                          prox_weight=jnp.asarray(0.2, jnp.float32),
+                          labels=tuple(range(10)),
+                          min_points=jnp.asarray(4, jnp.int32),
+                          min_obs=jnp.asarray(1, jnp.int32),
+                          zones=(0, 1, 2, 3), grid=GRID, k=K),
+        "spatial_only": Query(near=(center, radius),
+                              prox_weight=jnp.asarray(1.0, jnp.float32),
+                              labels=tuple(range(10)), k=K),
+    }
+
+
+def _time_plan(plan, target, spec, reps: int) -> float:
+    for _ in range(2):                                   # warm the jit
+        jax.block_until_ready(plan(target, spec).scores)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(plan(target, spec).scores)
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
+def run(full: bool = False, smoke: bool = False, use_pallas: bool = False):
+    sizes = [256] if smoke else [1_000, 10_000, 30_000]
+    reps = 5 if smoke else 20
+    out = {"k": K, "embed_dim": EDIM, "use_pallas": use_pallas}
+    for n in sizes:
+        st = synthetic_store(n, n, EDIM, 16, seed=0,
+                             centroid_low=(-8.0, 0.0, -8.0),
+                             centroid_high=(8.0, 2.0, 8.0))
+        qe = st.embed[n // 2]
+        center = st.centroid[n // 2]
+        row = {}
+        for name, spec in _specs(qe, center).items():
+            plan = compile_query(spec, st, use_pallas=use_pallas)
+            row[name] = _time_plan(plan, st, spec, reps)
+            csv_row(f"query_engine[{n},{name}]", row[name] * 1e3,
+                    f"k={K};pallas={int(use_pallas)}")
+        # serving amortization: 16 same-plan queries, one fused dispatch
+        qs = jnp.tile(qe[None], (16, 1))
+        cs = jnp.tile(center[None], (16, 1))
+        bspec = Query(embed=qs, near=(cs, jnp.full((16,), 4.0, jnp.float32)),
+                      prox_weight=jnp.full((16,), 0.2, jnp.float32),
+                      k=K, batched=True)
+        bplan = compile_query(bspec, st, use_pallas=use_pallas)
+        bt = _time_plan(bplan, st, bspec, reps)
+        row["batched16"] = bt
+        row["batched16_per_query"] = bt / 16
+        csv_row(f"query_engine[{n},batched16]", bt * 1e3,
+                f"per_query_ms={bt / 16:.3f}")
+        heavy = max(row["embed_spatial"], row["embed_attrs"],
+                    row["full_mix"])
+        row["predicate_overhead_x"] = heavy / row["embed_only"]
+        out[str(n)] = row
+    mid = str(sizes[min(1, len(sizes) - 1)])
+    out["fused_within_1_2x"] = bool(
+        out[mid]["predicate_overhead_x"] <= 1.2)
+    out["sub_100ms_at_10k"] = bool(out[mid]["full_mix"] < 100.0)
+    csv_row("query_engine[overhead@10k]",
+            out[mid]["predicate_overhead_x"] * 1e6,
+            f"fused_within_1.2x={out['fused_within_1_2x']};"
+            f"sub_100ms={out['sub_100ms_at_10k']}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -15,7 +15,7 @@ sys.path.insert(0, str(ROOT))
 
 from benchmarks import (downstream_bw, fleet_scale, ingest_tick,
                         local_map_scale, mapping_latency, power_model,
-                        query_latency, roofline, upstream_bw)
+                        query_engine, query_latency, roofline, upstream_bw)
 
 SUITES = {
     "tab4_fig3_mapping": mapping_latency.run,
@@ -27,6 +27,7 @@ SUITES = {
     "roofline": roofline.run,
     "ingest_tick": ingest_tick.run,
     "fleet_scale": fleet_scale.run,
+    "query_engine": query_engine.run,
 }
 
 

@@ -5,8 +5,11 @@ Runs the FleetSimulator — C simulated clients with heterogeneous networks
 spatial zones — against one MappingServer-driven scene.  The server tick is
 one vmapped collect dispatch per dirty zone (never a loop over clients),
 and clients receive bytes only for the zones their pose overlaps.
-Cross-client SQ queries multiplex through the continuous-batching
-scheduler.
+Cross-client SQ queries are declarative `Query` specs (similarity + a
+radius-around-the-client spatial predicate) multiplexed through the
+continuous-batching scheduler; the epilogue runs zone- and label-filtered
+queries straight against the zone-sharded fleet store (shard pruning
+before dispatch).
 
     PYTHONPATH=src python examples/fleet_session.py [n_clients]
 """
@@ -16,12 +19,13 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Knobs, MappingServer
 from repro.data.scenes import make_scene, scene_stream
 from repro.perception.embedder import OracleEmbedder
-from repro.server import FleetSimulator, ZoneGrid
+from repro.server import FleetSimulator, Query, ZoneGrid
 
 
 def main():
@@ -59,6 +63,25 @@ def main():
     per = np.array([c.session.down_bytes for c in sim.clients])
     print(f"  per-client bytes p50/p95: {np.percentile(per, 50) / 1e3:.1f} / "
           f"{np.percentile(per, 95) / 1e3:.1f} kB")
+
+    # declarative queries straight against the zone-sharded fleet store:
+    # zone membership prunes shards BEFORE dispatch, labels/min_points ride
+    # the fused top-k as -inf score injection
+    labels = sorted(set(classes.values()))
+    spec = Query(embed=emb.embed_text(labels[0]),
+                 zones=(0,), grid=Query.grid_of(sim.grid),
+                 min_points=jnp.asarray(4), k=3)
+    res = sim.server.query(spec)
+    hits = [(int(o), round(float(s), 3))
+            for o, s in zip(res.oids, res.scores) if o]
+    print(f"  zone-0 query '{labels[0]}':  {hits}")
+    spec = Query(embed=emb.embed_text(labels[1]),
+                 near=(jnp.asarray([0.0, 1.5, 0.0]), jnp.asarray(3.0)),
+                 labels=(int(labels[1]),), k=3)
+    res = sim.server.query(spec)
+    hits = [(int(o), round(float(s), 3))
+            for o, s in zip(res.oids, res.scores) if o]
+    print(f"  near+label '{labels[1]}' within 3 m of origin: {hits}")
 
 
 if __name__ == "__main__":

@@ -11,8 +11,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 import jax
 import numpy as np
 
-from repro.core import Knobs, MappingServer
-from repro.core.query import query_server
+from repro.core import Knobs, MappingServer, Query, execute_query
 from repro.data.scenes import CLASS_NAMES, make_scene, scene_stream
 from repro.perception.embedder import OracleEmbedder
 
@@ -36,7 +35,8 @@ def main():
     print("\nqueries:")
     mapped = set(np.asarray(server.store.label)[np.asarray(server.store.active)])
     for cid in sorted(mapped)[:6]:
-        res = query_server(server.store, embedder.embed_text(int(cid)))
+        res = execute_query(server.store,
+                            Query(embed=embedder.embed_text(int(cid)), k=5))
         c = np.asarray(server.store.centroid[int(res.slots[0])])
         print(f"  'where is the {CLASS_NAMES[cid]}?' -> object "
               f"#{int(res.oids[0])} at ({c[0]:+.2f}, {c[1]:+.2f}, {c[2]:+.2f})"

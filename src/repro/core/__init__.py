@@ -5,5 +5,7 @@ from repro.core.knobs import Knobs, DEFAULT_KNOBS
 from repro.core.store import ObjectStore, init_store, store_from_knobs
 from repro.core.local_map import LocalMap, init_local_map, ObjectUpdate
 from repro.core.pipeline import MappingServer, StageTimes
+from repro.core.query import (Query, QueryResult, CompiledQuery,
+                              compile_query, execute_query, stack_queries)
 from repro.core.runtime import (NetworkModel, PowerModel, DeviceClient,
                                 CloudService, ClientSession, choose_mode)

@@ -99,8 +99,9 @@ class PowerModel:
 def _client_fns(knobs: Knobs, use_pallas: bool):
     """Jitted device-side functions, shared by every DeviceClient with the
     same knobs — a C-client fleet compiles each step once, not C times."""
-    query = jax.jit(lambda m, e: query_mod.query_local(
-        m, e, use_pallas=use_pallas))
+    def query(m, e):           # LQ: the declarative engine's fused dispatch
+        return query_mod.execute_query(
+            m, query_mod.Query(embed=e, k=5), use_pallas=use_pallas)
     apply_one = jax.jit(apply_update)
 
     def _ingest_fn(m, batch, user_pos, interest_embeds):
@@ -150,7 +151,18 @@ class DeviceClient:
         return local_map_nbytes(self.local)
 
     def query(self, embed: jax.Array):
+        """Embedding-only LQ (top-5 cosine) — the paper's Fig. 4/5 path."""
         res = self._query(self.local, embed)
+        jax.block_until_ready(res.scores)
+        self.lq_count += 1
+        return res
+
+    def query_spec(self, spec):
+        """Declarative LQ: run a full ``core.query.Query`` (spatial +
+        attribute predicates, score combination) against the local map as
+        one fused dispatch."""
+        res = query_mod.execute_query(self.local, spec,
+                                      use_pallas=self.use_pallas)
         jax.block_until_ready(res.scores)
         self.lq_count += 1
         return res
@@ -169,7 +181,8 @@ class CloudService:
     def __post_init__(self):
         if self.sync is None:
             self.sync = init_sync(self.knobs.server_capacity)
-        self._query = jax.jit(lambda st, e: query_mod.query_server(st, e))
+        self._query = lambda st, e: query_mod.execute_query(
+            st, query_mod.Query(embed=e, k=5))
 
     def update_tick(self, *, network_up: bool, full_map: bool = False,
                     priorities=None):
@@ -194,7 +207,15 @@ class CloudService:
         return packet
 
     def query(self, embed: jax.Array):
+        """Embedding-only SQ (top-5 cosine) — the paper's Fig. 4 path."""
         res = self._query(self.store_ref.store, embed)
+        jax.block_until_ready(res.scores)
+        return res
+
+    def query_spec(self, spec):
+        """Declarative SQ: one fused predicate+score+top-k dispatch over
+        the server store (see core.query.Query)."""
+        res = query_mod.execute_query(self.store_ref.store, spec)
         jax.block_until_ready(res.scores)
         return res
 

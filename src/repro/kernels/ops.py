@@ -33,6 +33,14 @@ def query_topk_multi(qs, embeds, active, k: int):
                                        interpret=_interpret())
 
 
+@partial(jax.jit, static_argnums=(3,))
+def query_topk_bias(qs, embeds, bias, k: int):
+    """[Q, E] queries + [Q, N] score bias (NEG = slot masked out): the
+    declarative query engine's fused predicate+score+top-k sweep."""
+    return _qt.query_topk_bias_pallas(qs, embeds, bias, k,
+                                      interpret=_interpret())
+
+
 @jax.jit
 def nearest_dist(a, b, b_valid):
     """Pads coords to 8 lanes then runs the blocked kernel."""

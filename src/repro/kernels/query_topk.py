@@ -1,24 +1,33 @@
-"""Fused query-similarity + running top-k Pallas kernels.
+"""Fused query-score + running top-k Pallas kernels.
 
 SemanticXR's query hot-spot (Sec. 2.3.2 / Fig. 5): score text embeddings
 against every object embedding and keep the best k — the per-query cost that
 grows with map size.  The jnp path materializes the full [N] similarity
 vector in HBM, then runs a full top-k pass (second HBM sweep).  These kernels
 stream the embedding table through VMEM once: each grid step matmuls an
-[Nb, E] block against the query (MXU), masks inactive slots, and folds the
-block's candidates into a [k]-sized running top-k held in the output refs —
-one HBM pass, no [N] intermediate.
+[Nb, E] block against the query batch (MXU), adds the block's per-slot score
+bias, and folds the block's candidates into a [k]-sized running top-k held in
+the output refs — one HBM pass, no [N] intermediate.
+
+The ``bias`` input is how the declarative query engine (core/query.py) rides
+the same sweep: predicate masks are injected as ``NEG`` bias (an excluded
+slot can never enter the running list) and score-combination terms (e.g. the
+proximity bonus) as finite bias.  The [Q, N] bias is computed outside the
+kernel and streamed through it alongside the [N, E] table — O(Q*N) extra
+traffic, small next to the table's O(N*E) — so a predicate-heavy query
+stays within a few percent of the embedding-only dispatch and never pays a
+gather/compaction pass over the table.
 
 The block fold is a proper top-k merge: top-k of the block (sort-based,
-O(Nb log Nb) work on the VPU) then a [2k] merge with the running list —
-instead of the seed's k sequential argmax passes over the [k + Nb]
-candidate buffer (O(k·(k+Nb))).
+O(Nb log Nb) work on the VPU) then a [2k] merge with the running list.
 
-Two variants:
-  * ``query_topk_pallas``        — one query [E], grid (N/Nb,).
-  * ``query_topk_multi_pallas``  — a [Q, E] query batch resident in VMEM,
-    same grid: the embedding table streams through HBM ONCE for all Q
-    queries (the serving batch step), instead of Q full sweeps.
+Variants:
+  * ``query_topk_bias_pallas``   — [Q, E] queries + [Q, N] bias (the engine
+    entry point; the query batch is resident in VMEM, the table and bias
+    stream through HBM once for all Q queries).
+  * ``query_topk_multi_pallas``  — active-mask compatibility wrapper
+    (bias = 0/NEG from the mask).
+  * ``query_topk_pallas``        — the Q=1 special case.
 
 Grids are sequential on TPU, so outputs act as cross-step carries.
 """
@@ -59,8 +68,8 @@ def query_topk_pallas(q: jax.Array, embeds: jax.Array, active: jax.Array,
     return vals[0], idx[0]
 
 
-def _multi_kernel(q_ref, e_ref, m_ref, vals_ref, idx_ref, *, k: int,
-                  block_n: int):
+def _bias_kernel(q_ref, e_ref, b_ref, vals_ref, idx_ref, *, k: int,
+                 block_n: int):
     step = pl.program_id(0)
 
     @pl.when(step == 0)
@@ -71,38 +80,40 @@ def _multi_kernel(q_ref, e_ref, m_ref, vals_ref, idx_ref, *, k: int,
     # [Q, E] @ [E, Nb] -> [Q, Nb] on the MXU — one matmul serves all queries
     sim = jnp.dot(q_ref[...], e_ref[...].T,
                   preferred_element_type=jnp.float32)          # [Q, Nb]
-    sim = jnp.where(m_ref[...].T > 0, sim, NEG)
+    b = b_ref[...]                                             # [Q, Nb]
+    # bias == NEG marks a predicate-excluded slot; finite bias is additive
+    sim = jnp.where(b > NEG * 0.5, sim + b, NEG)
     base = step * block_n
     mv, mi = _merge_topk(vals_ref[...], idx_ref[...], sim, base, k)
     vals_ref[...] = mv
     idx_ref[...] = mi
 
 
-def query_topk_multi_pallas(qs: jax.Array, embeds: jax.Array,
-                            active: jax.Array, k: int, *,
-                            block_n: int = 1024, interpret: bool = True):
-    """qs: [Q, E]; embeds: [N, E]; active: [N] -> ([Q, k], [Q, k]).
+def query_topk_bias_pallas(qs: jax.Array, embeds: jax.Array,
+                           bias: jax.Array, k: int, *,
+                           block_n: int = 1024, interpret: bool = True):
+    """qs: [Q, E]; embeds: [N, E]; bias: [Q, N] -> ([Q, k], [Q, k]).
 
-    The query batch stays resident in VMEM; the embedding table streams
-    through once for ALL Q queries (vs Q independent sweeps when vmapping
-    the single-query kernel).
+    score[q, n] = qs[q] . embeds[n] + bias[q, n], with bias == NEG masking
+    slot n out for query q entirely.  The query batch stays resident in
+    VMEM; the embedding table and bias stream through once for ALL Q
+    queries (vs Q independent sweeps when vmapping a single-query kernel).
     """
     Q, E = qs.shape
     N = embeds.shape[0]
     pad = (-N) % block_n
     if pad:
         embeds = jnp.pad(embeds, ((0, pad), (0, 0)))
-        active = jnp.pad(active, (0, pad))
+        bias = jnp.pad(bias, ((0, 0), (0, pad)), constant_values=NEG)
     Np = N + pad
-    mask = active.astype(jnp.float32)[:, None]
     grid = (Np // block_n,)
     vals, idx = pl.pallas_call(
-        functools.partial(_multi_kernel, k=k, block_n=block_n),
+        functools.partial(_bias_kernel, k=k, block_n=block_n),
         grid=grid,
         in_specs=[
             pl.BlockSpec((Q, E), lambda i: (0, 0)),            # queries resident
             pl.BlockSpec((block_n, E), lambda i: (i, 0)),      # stream blocks
-            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+            pl.BlockSpec((Q, block_n), lambda i: (0, i)),      # stream bias
         ],
         out_specs=[
             pl.BlockSpec((Q, k), lambda i: (0, 0)),
@@ -113,5 +124,21 @@ def query_topk_multi_pallas(qs: jax.Array, embeds: jax.Array,
             jax.ShapeDtypeStruct((Q, k), jnp.int32),
         ],
         interpret=interpret,
-    )(qs, embeds, mask)
+    )(qs, embeds, bias)
     return vals, idx
+
+
+def query_topk_multi_pallas(qs: jax.Array, embeds: jax.Array,
+                            active: jax.Array, k: int, *,
+                            block_n: int = 1024, interpret: bool = True):
+    """qs: [Q, E]; embeds: [N, E]; active: [N] -> ([Q, k], [Q, k]).
+
+    Active-mask compatibility wrapper over the bias kernel: an inactive
+    slot is a NEG bias, an active one a 0 bias (identical scores to the
+    seed mask kernel)."""
+    Q = qs.shape[0]
+    N = embeds.shape[0]
+    bias = jnp.broadcast_to(
+        jnp.where(active, 0.0, NEG).astype(jnp.float32)[None, :], (Q, N))
+    return query_topk_bias_pallas(qs, embeds, bias, k, block_n=block_n,
+                                  interpret=interpret)

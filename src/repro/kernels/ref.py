@@ -19,6 +19,15 @@ def query_topk_multi_ref(qs: jax.Array, embeds: jax.Array, active: jax.Array,
     return jax.vmap(lambda q: query_topk_ref(q, embeds, active, k))(qs)
 
 
+def query_topk_bias_ref(qs: jax.Array, embeds: jax.Array, bias: jax.Array,
+                        k: int, *, neg: float = -1e30):
+    """qs: [Q, E]; embeds: [N, E]; bias: [Q, N] -> ([Q, k], [Q, k]).
+    bias == neg masks the slot out; finite bias is additive."""
+    sim = qs @ embeds.T
+    sim = jnp.where(bias > neg * 0.5, sim + bias, -jnp.inf)
+    return jax.lax.top_k(sim, k)
+
+
 def nearest_dist_ref(a: jax.Array, b: jax.Array, b_valid: jax.Array):
     """a: [M, D]; b: [N, D]; b_valid: [N] -> min squared distance per a row.
     (the association/chamfer spatial primitive)"""

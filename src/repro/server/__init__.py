@@ -25,10 +25,17 @@ Three layers:
              through `serving.batching.BatchScheduler` +
              `core.query` multi-query top-k.
 
+Queries against the fleet store go through the declarative engine
+(`core.query`, re-exported here): `FleetServer.query(Query(...))` compiles
+the spec against the zone-sharded store — zone/near predicates prune shards
+before dispatch, every selected shard runs the same fused plan.
+
 Benchmarks: `benchmarks/fleet_scale.py` (tick latency and per-client
 downstream bytes vs fleet size C) -> BENCH_fleet_scale.json; see
 EXPERIMENTS.md § Fleet scale.  Tests: tests/test_fleet.py.
 """
+from repro.core.query import (Query, QueryResult, CompiledQuery,
+                              compile_query, execute_query, stack_queries)
 from repro.server.session import (FleetBatch, FleetPacket, FleetSync,
                                   SessionManager)
 from repro.server.zones import ZoneGrid, ZoneShardedStore

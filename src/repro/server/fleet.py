@@ -8,8 +8,10 @@ to quiet zones costs (and receives) nothing.
 FleetSimulator drives tens-to-hundreds of clients against one mapped scene:
 heterogeneous NetworkModels (mixed RTTs/bandwidths, staggered outages),
 join/leave churn mid-session, per-client poses wandering the room (zone
-subscriptions follow), and cross-client queries multiplexed through
-`serving.batching.BatchScheduler` over the multi-query top-k engine.  Each
+subscriptions follow), and cross-client queries — declarative
+`core.query.Query` specs (open-vocab similarity + radius-around-pose) —
+multiplexed through `serving.batching.BatchScheduler` over the fused
+query engine.  Each
 client's delivery/ingest/mode step is `core.runtime.ClientSession` — the
 same code path as the single-client example.
 """
@@ -23,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.knobs import Knobs
+from repro.core.query import Query, QueryResult, compile_query
 from repro.core.runtime import ClientSession, DeviceClient, NetworkModel
 from repro.core.store import ObjectStore
 from repro.server.session import FleetPacket, SessionManager
@@ -110,6 +113,17 @@ class FleetServer:
             total += pkt.nbytes
         return total
 
+    # -- query plane ---------------------------------------------------------
+    def query(self, spec: Query, *, use_pallas: bool = False) -> QueryResult:
+        """Run a declarative query against the zone-sharded fleet store.
+
+        ``compile_query`` prunes shards from the spec's zone / near
+        predicates before dispatch; each selected shard runs the same fused
+        predicate+score+top-k plan.  Result slots are global
+        ``zone * zone_capacity + shard_slot`` rows."""
+        return compile_query(spec, self.zoned,
+                             use_pallas=use_pallas)(self.zoned)
+
 
 # ---------------------------------------------------------------------------
 @dataclass
@@ -153,6 +167,7 @@ class FleetSimulator:
     tick_s: float = 1.0
     churn: float = 0.25                # fraction of clients that join late
     query_prob: float = 0.5
+    query_radius: float = 6.0          # SQ spatial predicate around the pose
     server: FleetServer = None
     clients: list = field(default_factory=list)
     scheduler: object = None
@@ -249,6 +264,8 @@ class FleetSimulator:
                 if mode is None:
                     mode = cl.session.step(t)
                 # cross-client queries: SQ rides the shared batch scheduler
+                # as a declarative spec — open-vocab similarity AND a
+                # radius-around-the-client spatial predicate, one dispatch
                 if embedder is not None and len(active_labels) \
                         and np.random.default_rng(self.seed + i * 131
                                                   + cl.cid).random() \
@@ -256,7 +273,12 @@ class FleetSimulator:
                     cid_q = int(active_labels[(cl.cid + i)
                                               % len(active_labels)])
                     if mode == "SQ":
-                        self.scheduler.submit(embedder.embed_text(cid_q))
+                        self.scheduler.submit(Query(
+                            embed=embedder.embed_text(cid_q),
+                            near=(jnp.asarray(cl.pose_at(t)),
+                                  jnp.asarray(self.query_radius,
+                                              jnp.float32)),
+                            k=3))
                         cl.queries += 1
                     else:
                         cl.lq_ticks += 1

@@ -93,39 +93,63 @@ class BatchScheduler:
 
 def make_query_step_fn(get_map, *, k: int = 5, use_pallas: bool = False,
                        pad_to: int | None = None):
-    """Build a BatchScheduler ``step_fn`` over the SemanticXR query engine.
+    """Build a BatchScheduler ``step_fn`` over the declarative query engine.
 
-    Payloads are query embeddings [E].  Each engine step stacks them into one
-    [Q, E] batch and runs a SINGLE fused similarity+top-k sweep over the map
-    (the multi-query Pallas kernel when use_pallas — the embedding table
-    streams through once for the whole batch, instead of Q full sweeps).
+    Payloads are ``core.query.Query`` specs — semantic, spatial, and
+    attribute predicates all ride the same dispatch.  Raw embedding arrays
+    [E] are accepted as legacy payloads and normalized to
+    ``Query(embed=..., k=k)``.
 
-    ``get_map`` returns the current map-like object (ObjectStore or LocalMap
-    — anything with .embed/.active/.ids), re-read every step so a live
-    mapping server can keep mutating it between steps.  ``pad_to`` pads the
-    ragged tail batch to a fixed Q (defaults to the scheduler batch size at
-    the call site) so the jitted step sees one shape, not one per tail size.
+    Each engine step groups same-plan specs, stacks each group into ONE
+    batched spec (struct-of-arrays leading Q dim), and runs a SINGLE fused
+    predicate+score+top-k sweep per group over the map (the bias-kernel
+    Pallas sweep when use_pallas — the embedding table streams through once
+    for the whole batch, instead of Q full sweeps).  A uniform scheduler
+    batch (the common case: every client sends the same plan shape) is
+    exactly one dispatch.
 
-    Returns (oid, score) of the top hit per request, in payload order.
+    ``get_map`` returns the current query target (ObjectStore, LocalMap, or
+    ZoneShardedStore), re-read every step so a live mapping server can keep
+    mutating it between steps.  ``pad_to`` pads a ragged group to a fixed Q
+    (defaults to the scheduler batch size at the call site) so the jitted
+    step sees one shape, not one per tail size.
+
+    Returns, in payload order: ``(oid, score)`` of the top hit for legacy
+    embedding payloads, or the request's full ``QueryResult`` row (numpy)
+    for Query payloads.
     """
     import jax
     import jax.numpy as jnp
 
-    from repro.core.query import _batched_topk
-
-    fn = jax.jit(lambda emb, act, ids, qs: _batched_topk(
-        qs, emb, act, ids, k, use_pallas=use_pallas))
+    from repro.core.query import Query, QueryResult, execute_query, \
+        stack_queries
 
     def step_fn(payloads: list) -> list:
         m = get_map()
-        qs = jnp.stack(payloads)
-        q = qs.shape[0]
-        width = max(pad_to or 0, q)
-        if width > q:
-            qs = jnp.pad(qs, ((0, width - q), (0, 0)))
-        res = fn(m.embed, m.active, m.ids, qs)
-        oids = np.asarray(res.oids[:q, 0])
-        scores = np.asarray(res.scores[:q, 0])
-        return [(int(oids[i]), float(scores[i])) for i in range(q)]
+        legacy = [not isinstance(p, Query) for p in payloads]
+        specs = [Query(embed=jnp.asarray(p), k=k) if leg else p
+                 for p, leg in zip(payloads, legacy)]
+        # group by plan structure: each group is one fused dispatch
+        groups: dict = {}
+        for pos, s in enumerate(specs):
+            key = (jax.tree.structure(s), s.tree_flatten()[1])
+            groups.setdefault(key, []).append(pos)
+        results: list = [None] * len(specs)
+        for positions in groups.values():
+            q = len(positions)
+            width = max(pad_to or 0, q)
+            batched = stack_queries([specs[p] for p in positions],
+                                    pad_to=width)
+            res = execute_query(m, batched, use_pallas=use_pallas)
+            oids = np.asarray(res.oids)
+            scores = np.asarray(res.scores)
+            slots = np.asarray(res.slots)
+            for i, pos in enumerate(positions):
+                if legacy[pos]:
+                    results[pos] = (int(oids[i, 0]), float(scores[i, 0]))
+                else:
+                    results[pos] = QueryResult(oids=oids[i], scores=scores[i],
+                                               slots=slots[i])
+        return results
 
     return step_fn
