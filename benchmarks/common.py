@@ -35,12 +35,13 @@ def default_knobs(**kw) -> Knobs:
 
 
 def build_map(*, mode="semanticxr", n_objects=40, frames=60, interval=5,
-              h=240, w=320, knobs=None, seed=0, embedder=None):
+              h=240, w=320, knobs=None, seed=0, embedder=None,
+              instrument=False):
     scene = make_scene(n_objects=n_objects, seed=seed)
     classes = {o.oid: o.class_id for o in scene.objects}
     emb = embedder or OracleEmbedder(embed_dim=EDIM)
     srv = MappingServer(knobs=knobs or default_knobs(), embedder=emb,
-                        mode=mode)
+                        mode=mode, instrument=instrument)
     key = jax.random.key(seed)
     times = []
     for i, fr in enumerate(scene_stream(scene, n_frames=frames,

@@ -4,10 +4,20 @@ semantic quality across cumulative configurations:
   B+P     + object-level parallelism
   B+P+SD  + object-level geometry downsampling (= SemanticXR)
 Same perception models in every mode; differences are system organization.
+
+The B+P+SD arm runs instrumented (per-stage walls) so the Fig. 3 bar
+decomposition stays measurable; its lift bar is the fused
+lift->compact->downsample->stats kernel (kernels/lift_compact).  A fourth
+row, ``B+P+SD (fused)``, is the production path: ONE jitted ingest dispatch
+per keyframe.  Two microbenches pin the PR 1 / PR 4 tentpoles at identical
+shapes (associate batched-vs-scan, lift fused-vs-seed), and a jaxpr guard
+verifies the fused lift never materializes a [D, HW, 3] intermediate —
+the seed composition is checked too, as a positive control.
 """
 from __future__ import annotations
 
 import time
+from functools import partial
 
 import numpy as np
 import jax
@@ -15,14 +25,104 @@ import jax.numpy as jnp
 
 from benchmarks.common import build_map, csv_row, default_knobs, semantic_quality
 from repro.core import association as assoc
+from repro.core import geometry as geo
+from repro.core.pipeline import LIFT_BUFFER
+from repro.data.scenes import render_frame
+from repro.kernels import ops
 
 MODES = [("B", "baseline"), ("B+P", "parallel"), ("B+P+SD", "semanticxr")]
+
+
+def _max_intermediate_elems(closed_jaxpr) -> int:
+    """Largest intermediate (by element count) anywhere in a jaxpr,
+    recursing into pjit/scan/cond sub-jaxprs."""
+    worst = 0
+
+    def walk(jaxpr):
+        nonlocal worst
+        for eqn in jaxpr.eqns:
+            for v in eqn.outvars:
+                shape = getattr(getattr(v, "aval", None), "shape", None)
+                if shape:
+                    worst = max(worst, int(np.prod(shape)))
+            for val in eqn.params.values():
+                for sub in (val if isinstance(val, (list, tuple)) else [val]):
+                    if hasattr(sub, "jaxpr") and hasattr(sub.jaxpr, "eqns"):
+                        walk(sub.jaxpr)
+                    elif hasattr(sub, "eqns"):
+                        walk(sub)
+
+    walk(closed_jaxpr.jaxpr)
+    return worst
+
+
+def _timed(fn, args, reps: int):
+    out = fn(*args)                                   # compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
+def _seed_lift_composition(stride: int, budget: int):
+    """The pre-fusion lift path: vmapped argsort lift + separate downsample
+    + per-detection centroid/bbox — the baseline the fused kernel replaces."""
+    def fn(depth, masks, intr, pose):
+        pts, ns, _ = jax.vmap(
+            partial(geo.lift_depth, stride=stride, max_points=LIFT_BUFFER),
+            in_axes=(None, 0, None, None))(depth, masks, intr, pose)
+        pts, ns = jax.vmap(lambda p, n: geo.downsample(p, n, budget))(pts, ns)
+        c, mn, mx = jax.vmap(geo.centroid_bbox)(pts, ns)
+        return pts, ns, c, mn, mx
+    return fn
+
+
+def _lift_microbench(scene, classes, srv, kn, *, h, w, frames, reps=30):
+    """Fused lift_compact vs the seed composition at identical shapes, plus
+    the no-[D, HW, 3]-intermediate guard on both."""
+    r = kn.depth_downsampling_ratio
+    D = kn.max_detections_per_frame
+    fr = render_frame(scene, frames // 2, h=h, w=w, n_frames=frames)
+    _, masks_lo = srv._detect(fr, classes)
+    pad_m = np.zeros((D,) + masks_lo.shape[1:], bool)
+    pad_m[: len(masks_lo)] = masks_lo
+    depth_lo = jnp.asarray(fr.depth[::r, ::r] if r > 1 else fr.depth)
+    masks = jnp.asarray(pad_m)
+    intr = jnp.asarray(fr.intrinsics)
+    pose = jnp.asarray(fr.pose, jnp.float32)
+    budget = kn.max_object_points_server
+
+    fused = jax.jit(partial(ops.lift_compact, stride=r, budget=budget,
+                            lift_cap=LIFT_BUFFER))
+    seed = jax.jit(_seed_lift_composition(r, budget))
+    args = (depth_lo, masks, intr, pose)
+    fused_ms = _timed(fused, args, reps)
+    seed_ms = _timed(seed, args, reps)
+
+    # acceptance guard: nothing in the fused jaxpr reaches [D, HW, 3]
+    hw = int(np.prod(depth_lo.shape))
+    limit = D * hw * 3
+    fused_max = _max_intermediate_elems(jax.make_jaxpr(fused)(*args))
+    seed_max = _max_intermediate_elems(jax.make_jaxpr(seed)(*args))
+    assert fused_max < limit, (
+        f"fused lift materializes a {fused_max}-element intermediate "
+        f"(>= D*HW*3 = {limit})")
+    return {
+        "fused_ms": fused_ms, "seed_ms": seed_ms,
+        "speedup": seed_ms / max(fused_ms, 1e-9),
+        "max_intermediate_elems": {"fused": fused_max, "seed": seed_max},
+        "dhw3_elems": limit,
+        "fused_materializes_dhw3": bool(fused_max >= limit),
+        "seed_materializes_dhw3": bool(seed_max >= limit),
+    }
 
 
 def _associate_microbench(srv, kn, reps: int = 20):
     """Batched associate vs the seed sequential-scan path, identical shapes:
     the warm store from the B+P+SD run plus one synthetic full detection
-    batch.  This is the tentpole speedup, measured not asserted."""
+    batch.  This is the PR 1 tentpole speedup, measured not asserted."""
     D = kn.max_detections_per_frame
     P = srv.store.points.shape[1]
     E = srv.store.embed.shape[1]
@@ -57,8 +157,13 @@ def _associate_microbench(srv, kn, reps: int = 20):
     return batched_ms, scan_ms
 
 
-def run(full: bool = False):
-    n_objects, frames = (80, 100) if full else (30, 40)
+def run(full: bool = False, smoke: bool = False):
+    if smoke:
+        n_objects, frames, h, w = 10, 20, 120, 160
+    elif full:
+        n_objects, frames, h, w = 80, 100, 240, 320
+    else:
+        n_objects, frames, h, w = 30, 40, 240, 320
     rows = {}
     for label, mode in MODES:
         kn = default_knobs()
@@ -66,7 +171,8 @@ def run(full: bool = False):
             # baseline carries uncapped per-object geometry into association
             kn = default_knobs(max_object_points_server=2048)
         srv, emb, scene, times = build_map(mode=mode, n_objects=n_objects,
-                                           frames=frames, knobs=kn)
+                                           frames=frames, h=h, w=w, knobs=kn,
+                                           instrument=True)
         warm = times[2:]                       # drop jit-compile frames
         stage = {
             "detect": np.mean([t.detect_ms for t in warm]),
@@ -84,7 +190,34 @@ def run(full: bool = False):
     csv_row("tab4_speedup_BPSD_over_B", rows["B+P+SD"]["total_ms"] * 1e3,
             f"speedup={speedup:.2f}x;paper=2.2x")
 
-    # tentpole: batched associate vs the seed scan path, identical shapes
+    # --- production path: one jitted ingest dispatch per keyframe
+    srv_f, emb_f, scene_f, times_f = build_map(
+        mode="semanticxr", n_objects=n_objects, frames=frames, h=h, w=w,
+        knobs=default_knobs())
+    warm_f = times_f[2:]
+    stage_f = {
+        "detect": np.mean([t.detect_ms for t in warm_f]),
+        "ingest": np.mean([t.ingest_ms for t in warm_f]),
+    }
+    qf = semantic_quality(srv_f, emb_f, scene_f)
+    rows["B+P+SD (fused)"] = {
+        "stage_ms": stage_f, "total_ms": sum(stage_f.values()), **qf,
+    }
+    csv_row("fig3_mapping_latency[B+P+SD (fused)]",
+            rows["B+P+SD (fused)"]["total_ms"] * 1e3,
+            f"mAcc={qf['mAcc']:.1f};F-mIoU={qf['F-mIoU']:.1f};"
+            + ";".join(f"{k}={v:.1f}ms" for k, v in stage_f.items()))
+
+    # --- tentpole microbenches at identical shapes
+    classes = {o.oid: o.class_id for o in scene_f.objects}
+    lift = _lift_microbench(scene_f, classes, srv_f, default_knobs(),
+                            h=h, w=w, frames=frames)
+    csv_row("lift_fused_vs_seed", lift["fused_ms"] * 1e3,
+            f"fused={lift['fused_ms']:.2f}ms;seed={lift['seed_ms']:.2f}ms;"
+            f"speedup={lift['speedup']:.2f}x;target>=3x;"
+            f"no_dhw3={not lift['fused_materializes_dhw3']}")
+    rows["lift_microbench"] = lift
+
     batched_ms, scan_ms = _associate_microbench(srv, kn)
     assoc_speedup = scan_ms / max(batched_ms, 1e-9)
     csv_row("associate_batched_vs_scan", batched_ms * 1e3,

@@ -39,10 +39,18 @@ class Detections(NamedTuple):
 
 
 def association_scores(store: ObjectStore, det: Detections, *,
-                       spatial_sigma: float = 0.75):
-    """[D, cap] combined match score in [0,1]; inactive slots = -inf."""
-    cent_d = jax.vmap(lambda p, n: geo.centroid_bbox(p, n)[0])(
-        det.points, det.n_points)                          # [D,3]
+                       spatial_sigma: float = 0.75, det_centroid=None):
+    """[D, cap] combined match score in [0,1]; inactive slots = -inf.
+
+    ``det_centroid`` ([D, 3]) skips the per-detection centroid pass when
+    the caller already has it — the fused lift kernel (kernels/lift_compact)
+    folds centroid accumulation into its streaming sweep, so the ingest
+    path never recomputes it here."""
+    if det_centroid is not None:
+        cent_d = det_centroid
+    else:
+        cent_d = jax.vmap(lambda p, n: geo.centroid_bbox(p, n)[0])(
+            det.points, det.n_points)                      # [D,3]
     dist2 = jnp.sum(
         jnp.square(cent_d[:, None, :] - store.centroid[None, :, :]), axis=-1)
     spatial = jnp.exp(-dist2 / (2 * spatial_sigma ** 2))   # [D,cap]
@@ -55,7 +63,7 @@ def association_scores(store: ObjectStore, det: Detections, *,
 
 def associate(store: ObjectStore, det: Detections, *, frame: jax.Array,
               match_threshold: float = 0.6, point_budget: int = 2000,
-              ema: float = 0.25) -> ObjectStore:
+              ema: float = 0.25, det_centroid=None) -> ObjectStore:
     """Associate one frame's detections into the store. jit-able.
 
     Fully batched resolve — no per-detection scan:
@@ -73,7 +81,7 @@ def associate(store: ObjectStore, det: Detections, *, frame: jax.Array,
       4. each store field is written with ONE scatter; rows that neither
          merge nor insert target index ``cap``, which JAX scatter drops.
     """
-    score, _ = association_scores(store, det)
+    score, _ = association_scores(store, det, det_centroid=det_centroid)
     D, cap = score.shape
     frame = jnp.asarray(frame, jnp.int32)
     point_budget = min(point_budget, store.points.shape[1])

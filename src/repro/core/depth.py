@@ -32,11 +32,33 @@ def downsample_mask(mask: jax.Array, ratio: int) -> jax.Array:
     return mask[::ratio, ::ratio]
 
 
-def mapping_gate(mask_full: jax.Array, knobs: Knobs) -> jax.Array:
+# The min_mapping_bbox_area knob default is expressed in the paper's
+# full-sensor (720p) pixel units; bbox areas measured at a simulated render
+# resolution are rescaled to these units before gating.
+REF_SENSOR_PIXELS = 720 * 1280
+
+
+def mapping_gate(area, knobs: Knobs, *, frame_pixels: int):
     """True if this observation is incorporated now; False = deferred
-    (object-level mapping decision, Sec. 3.3)."""
-    area = geo.bbox_pixel_area(mask_full)
-    return area >= knobs.min_mapping_bbox_area
+    (object-level mapping decision, Sec. 3.3).
+
+    The ONE place the gate lives: ``area`` is the detection's projected
+    bbox pixel area in the frame's own full-res units (scalar or [K]
+    array, np or jnp), ``frame_pixels`` the frame's H*W.  Area is rescaled
+    to full-sensor (720p) units so the knob default applies at any
+    simulated render resolution; the gate only bites when depth is
+    actually downsampled (ratio > 1) — at full depth there is no quality
+    loss to defer for.
+    """
+    scaled = area * (REF_SENSOR_PIXELS / frame_pixels)
+    keep = scaled >= knobs.min_mapping_bbox_area
+    return keep | (knobs.depth_downsampling_ratio <= 1)
+
+
+def mapping_gate_mask(mask_full: jax.Array, knobs: Knobs) -> jax.Array:
+    """Gate straight from an instance mask (area via geometry.bbox_pixel_area)."""
+    return mapping_gate(geo.bbox_pixel_area(mask_full), knobs,
+                        frame_pixels=mask_full.size)
 
 
 @dataclass(frozen=True)

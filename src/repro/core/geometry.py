@@ -5,6 +5,14 @@ fixed-capacity masked buffers (capacity == the paper's max_object_points
 knob), so downsampling is a deterministic gather instead of the CPU-side
 random subsample — same quality role (Sec. 3.1), but shape-stable for
 jit/vmap over the object batch.
+
+The production ingest path no longer composes ``lift_depth`` ->
+``downsample`` -> ``centroid_bbox`` per frame: kernels/lift_compact fuses
+all three into one streaming pass with prefix-count destination indexing
+(no per-object argsort, no [D, HW, 3] intermediate).  The functions here
+remain the semantic ground truth (the fused path's oracle,
+``ref.lift_compact_ref``, is built from them), the B / B+P Fig. 3 ablation
+arms, and the merge/update primitives used outside frame ingest.
 """
 from __future__ import annotations
 

@@ -10,6 +10,15 @@ Three execution modes, matching the paper's Fig. 3 ablation bars:
   B+P+SD   + object-level geometry downsampling: per-object clouds capped at
            max_object_points_server before association (= SemanticXR).
 
+The production SemanticXR path is ONE jitted ``ingest_frame`` dispatch from
+the padded instance masks all the way through embed -> fused
+lift/compact/downsample/stats (kernels/lift_compact — no per-object argsort,
+no [D, HW, 3] intermediate) -> associate -> prune: a single device round
+trip per keyframe instead of the seed's four stage syncs.  Setting
+``instrument=True`` opts into the staged execution with per-stage
+``block_until_ready`` walls so Fig. 3's bar decomposition stays measurable;
+B and B+P keep the seed stage implementations as ablation arms.
+
 Perception models (detector stand-in = GT instance masks from the renderer;
 embedder = perception/embedder.py) are identical across modes — observed
 differences are system organization only (paper Sec. 4.2).  All stage
@@ -19,7 +28,7 @@ latency is measured, not retracing.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
 
 import numpy as np
@@ -32,6 +41,7 @@ from repro.core import geometry as geo
 from repro.core.knobs import Knobs
 from repro.core.store import ObjectStore, store_from_knobs
 from repro.data.scenes import Frame
+from repro.kernels import ops
 from repro.perception.embedder import OracleEmbedder
 
 LIFT_BUFFER = 4096   # uncapped per-object buffer (baseline mode)
@@ -43,11 +53,12 @@ class StageTimes:
     embed_ms: float = 0.0
     lift_ms: float = 0.0
     associate_ms: float = 0.0
+    ingest_ms: float = 0.0     # fused single-dispatch path (embed+lift+assoc)
 
     @property
     def total_ms(self):
         return (self.detect_ms + self.embed_ms + self.lift_ms +
-                self.associate_ms)
+                self.associate_ms + self.ingest_ms)
 
 
 @dataclass
@@ -55,6 +66,7 @@ class MappingServer:
     knobs: Knobs
     embedder: OracleEmbedder
     mode: str = "semanticxr"        # "baseline" | "parallel" | "semanticxr"
+    instrument: bool = False        # semanticxr: staged timings vs one dispatch
     store: ObjectStore = None
     frame_count: int = 0
     deferred: int = 0
@@ -63,47 +75,85 @@ class MappingServer:
         kn = self.knobs
         if self.store is None:
             self.store = store_from_knobs(kn, self.embedder.embed_dim)
+        r = kn.depth_downsampling_ratio
+        budget = kn.max_object_points_server
 
-        lift = partial(geo.lift_depth, stride=kn.depth_downsampling_ratio,
-                       max_points=LIFT_BUFFER)
-        # batched stages (P / SD modes): [D, ...] padded object batch
+        lift = partial(geo.lift_depth, stride=r, max_points=LIFT_BUFFER)
+        # seed batched stages (B+P ablation arm): [D, ...] padded object batch
         self._lift_batch = jax.jit(jax.vmap(lift, in_axes=(None, 0, None,
                                                            None)))
         self._embed_batch = jax.jit(self.embedder.embed_observation)
-        self._down_batch = jax.jit(jax.vmap(
-            lambda p, n: geo.downsample(p, n, kn.max_object_points_server)))
         # sequential stages (baseline): one object at a time
         self._lift_one = jax.jit(lift)
         self._embed_one = jax.jit(
             lambda c, k: self.embedder.embed_observation(c[None], k)[0])
 
+        # fused lift->compact->downsample->stats (SD instrumented arm): one
+        # dispatch replaces lift_batch + down_batch + the per-detection
+        # centroid pass inside association
+        self._lift_fused = partial(ops.lift_compact, stride=r, budget=budget,
+                                   lift_cap=LIFT_BUFFER)
+
         self._associate = jax.jit(lambda st, det, fr: assoc.associate(
-            st, det, frame=fr, point_budget=kn.max_object_points_server))
+            st, det, frame=fr, point_budget=budget))
+        self._associate_cent = jax.jit(
+            lambda st, det, cent, fr: assoc.associate(
+                st, det, frame=fr, point_budget=budget, det_centroid=cent))
         self._prune = jax.jit(lambda st, fr: assoc.prune_transients(
             st, frame=fr, min_obs=kn.min_obs_before_sync))
 
+        # the production path: ONE jitted dispatch per keyframe
+        def ingest_frame(st, depth_lo, masks, intr, pose, cids, valid, key,
+                         frame):
+            embs = self.embedder.embed_observation(cids, key)
+            pts, ns, cent, _, _ = ops.lift_compact(
+                depth_lo, masks, intr, pose, stride=r, budget=budget,
+                lift_cap=LIFT_BUFFER)
+            det = assoc.Detections(embed=embs, label=cids, points=pts,
+                                   n_points=ns, valid=valid)
+            st = assoc.associate(st, det, frame=frame, point_budget=budget,
+                                 det_centroid=cent)
+            return assoc.prune_transients(st, frame=frame,
+                                          min_obs=kn.min_obs_before_sync)
+
+        self._ingest = jax.jit(ingest_frame)
+
     # ------------------------------------------------------------------
     def _detect(self, frame: Frame, classes: dict):
-        """Detector stand-in: GT instance masks + mapping-policy filters."""
+        """Detector stand-in: GT instance masks + mapping-policy filters.
+
+        One vectorized bbox/area pass over the instance map — no per-object
+        ``np.nonzero`` loop — with the deferral decision delegated to
+        ``depth.mapping_gate``, the single home of the
+        ``min_mapping_bbox_area`` logic (Sec. 3.3).
+        Returns (class_ids [nd], masks_lo [nd, H/r, W/r] bool)."""
         kn = self.knobs
         r = kn.depth_downsampling_ratio
-        dets = []
-        for oid in frame.visible_ids:
-            cid = classes[int(oid)]
-            if cid in kn.skip_mapping_set:
-                continue
-            mask_full = frame.inst == oid
-            ys, xs = np.nonzero(mask_full)
-            area = (ys.max() - ys.min() + 1) * (xs.max() - xs.min() + 1)
-            # depth co-design gate: defer small objects (Sec. 3.3).  Area is
-            # scaled to full-sensor units so the knob default applies at any
-            # simulated render resolution.
-            full_scale = (720 * 1280) / mask_full.size
-            if r > 1 and area * full_scale < kn.min_mapping_bbox_area:
-                self.deferred += 1
-                continue
-            dets.append((int(oid), cid, mask_full))
-        return dets[: kn.max_detections_per_frame]
+        inst_lo = frame.inst[::r, ::r] if r > 1 else frame.inst
+        oids = np.asarray(frame.visible_ids, np.int32)
+        cids = np.asarray([classes[int(o)] for o in oids], np.int32)
+        if oids.size and kn.skip_mapping_set:
+            m = ~np.isin(cids, np.asarray(kn.skip_mapping_set))
+            oids, cids = oids[m], cids[m]
+        if oids.size == 0:
+            return cids[:0], np.zeros((0,) + inst_lo.shape, bool)
+
+        # full-res bbox areas in one pass: row/col presence -> extents
+        pres = frame.inst[None, :, :] == oids[:, None, None]   # [K, H, W]
+
+        def extent(present):                                   # [K, L] bool
+            first = present.argmax(axis=1)
+            last = present.shape[1] - 1 - present[:, ::-1].argmax(axis=1)
+            return last - first + 1
+
+        area = extent(pres.any(axis=2)) * extent(pres.any(axis=1))
+        keep = np.asarray(depth_mod.mapping_gate(
+            area, kn, frame_pixels=frame.inst.size))
+        self.deferred += int((~keep).sum())
+        oids = oids[keep][: kn.max_detections_per_frame]
+        cids = cids[keep][: kn.max_detections_per_frame]
+        masks_lo = inst_lo[None, :, :] == oids[:, None, None]
+        return cids, masks_lo
 
     # ------------------------------------------------------------------
     def process_frame(self, frame: Frame, classes: dict,
@@ -115,51 +165,65 @@ class MappingServer:
         times = StageTimes()
 
         t0 = time.perf_counter()
-        dets = self._detect(frame, classes)
+        cids_np, masks_lo = self._detect(frame, classes)
         times.detect_ms = (time.perf_counter() - t0) * 1e3
-        if not dets:
+        nd = len(cids_np)
+        if nd == 0:
             self.frame_count += 1
             return times
-        nd = len(dets)
 
         depth_lo = jnp.asarray(depth_mod.downsample_depth(frame.depth, r))
         intr = jnp.asarray(frame.intrinsics)
         pose = jnp.asarray(frame.pose, jnp.float32)
-        masks_lo = np.stack([depth_mod.downsample_mask(m, r)
-                             for _, _, m in dets])
-        cids_np = np.array([c for _, c, _ in dets], np.int32)
+        pad_c = jnp.asarray(np.pad(cids_np, (0, D - nd)))
+        pad_m = np.zeros((D,) + masks_lo.shape[1:], bool)
+        pad_m[:nd] = masks_lo
+        valid = jnp.asarray(np.arange(D) < nd)
 
-        # --- embedding (object-level parallelism: batch vs sequential)
+        # --- production path: ONE dispatch from masks to pruned store
+        if self.mode == "semanticxr" and not self.instrument:
+            t0 = time.perf_counter()
+            self.store = self._ingest(self.store, depth_lo,
+                                      jnp.asarray(pad_m), intr, pose, pad_c,
+                                      valid, key,
+                                      jnp.asarray(self.frame_count))
+            jax.block_until_ready(self.store.active)
+            times.ingest_ms = (time.perf_counter() - t0) * 1e3
+            self.frame_count += 1
+            return times
+
+        # --- staged execution (B / B+P arms, and instrumented SD)
+        # embedding (object-level parallelism: batch vs sequential)
         t0 = time.perf_counter()
         if self.mode == "baseline":
             embs = jnp.stack([self._embed_one(jnp.asarray(cids_np[i]),
                                               jax.random.fold_in(key, i))
                               for i in range(nd)])
         else:
-            pad_c = jnp.asarray(np.pad(cids_np, (0, D - nd)))
             embs = self._embed_batch(pad_c, key)
         embs.block_until_ready()
         times.embed_ms = (time.perf_counter() - t0) * 1e3
 
-        # --- lift to 3D
+        # lift to 3D
+        cent = None
         t0 = time.perf_counter()
         if self.mode == "baseline":
             lifted = [self._lift_one(depth_lo, jnp.asarray(masks_lo[i]),
                                      intr, pose) for i in range(nd)]
             pts = jnp.stack([l[0] for l in lifted])
             ns = jnp.stack([l[1] for l in lifted])
-        else:
-            pad_m = np.zeros((D,) + masks_lo.shape[1:], bool)
-            pad_m[:nd] = masks_lo
+        elif self.mode == "parallel":
             pts, ns, _ = self._lift_batch(depth_lo, jnp.asarray(pad_m), intr,
                                           pose)
-        # geometry downsampling (SD): cap before association
-        if self.mode == "semanticxr":
-            pts, ns = self._down_batch(pts, ns)
+        else:
+            # fused kernel: lift + downsample + centroid/bbox in one sweep
+            pts, ns, cent, _, _ = self._lift_fused(depth_lo,
+                                                   jnp.asarray(pad_m), intr,
+                                                   pose)
         pts.block_until_ready()
         times.lift_ms = (time.perf_counter() - t0) * 1e3
 
-        # --- association + merge (store buffers hold the cap; baseline and
+        # association + merge (store buffers hold the cap; baseline and
         # P modes carry the uncapped buffer into the merge path)
         t0 = time.perf_counter()
         if self.mode == "baseline":
@@ -169,14 +233,17 @@ class MappingServer:
             embs = jnp.pad(embs, ((0, pad), (0, 0)))
         det = assoc.Detections(
             embed=embs,
-            label=jnp.asarray(np.pad(cids_np, (0, D - nd))),
+            label=pad_c,
             points=pts,
             n_points=ns,
-            valid=jnp.arange(D) < nd,
+            valid=valid,
         )
-        self.store = self._associate(self.store, det,
-                                     jnp.asarray(self.frame_count))
-        self.store = self._prune(self.store, jnp.asarray(self.frame_count))
+        fr = jnp.asarray(self.frame_count)
+        if cent is not None:
+            self.store = self._associate_cent(self.store, det, cent, fr)
+        else:
+            self.store = self._associate(self.store, det, fr)
+        self.store = self._prune(self.store, fr)
         jax.block_until_ready(self.store.active)
         times.associate_ms = (time.perf_counter() - t0) * 1e3
 

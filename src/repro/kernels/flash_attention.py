@@ -69,8 +69,17 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            causal: bool = True, window: int = 0,
                            softcap: float = 0.0, block_q: int = 128,
-                           block_k: int = 128, interpret: bool = True):
-    """q,k,v: [H, S, dh] -> [H, S, dh].  (vmap over batch outside.)"""
+                           block_k: int = 128,
+                           interpret: bool | None = None):
+    """q,k,v: [H, S, dh] -> [H, S, dh].  (vmap over batch outside.)
+
+    ``interpret=None`` keys off the backend via the shared
+    ``ops._interpret()`` helper (Mosaic on TPU, interpret elsewhere) —
+    a direct caller gets the same deploy-ready default as ops entry points.
+    """
+    if interpret is None:
+        from repro.kernels.ops import _interpret
+        interpret = _interpret()
     H, S, dh = q.shape
     scale = dh ** -0.5
     pq = (-S) % block_q

@@ -1,0 +1,258 @@
+"""Fused frame-ingest geometry kernel: lift -> compact -> downsample -> stats.
+
+The seed server hot path ran, per frame, a vmapped ``geometry.lift_depth``
+(an O(HW log HW) ``argsort`` per object to compact valid pixels, plus a
+materialized [D, HW, 3] world-point intermediate), then a SEPARATE
+``downsample`` dispatch and per-object ``centroid_bbox`` work inside
+association.  After PR 1-3 batched everything else, that lift stage was
+~54% of B+P+SD mapping latency (BENCH_tab4_fig3_mapping.json).
+
+This module replaces the whole composition with ONE streaming pass over the
+depth frame that serves all D detections at once:
+
+  * back-projection is computed per pixel tile ONCE and shared across
+    objects (the seed recomputed nothing per object either, but paid the
+    [D, HW, 3] gather instead);
+  * per-object compaction uses cumsum/prefix-count destination indexing —
+    the r-th valid pixel of object d has rank r by construction, O(HW),
+    no sort of any kind;
+  * the stride-downsample to the point budget is folded into the same
+    indexing (rank r is kept iff some output slot i maps to it under
+    ``floor(i * n / budget)`` — at most one i per rank since n >= budget
+    makes the map strictly increasing), so ``downsample`` disappears as a
+    separate dispatch;
+  * centroid / bbox accumulate over the selected points in the same sweep,
+    so association no longer needs a per-detection ``centroid_bbox`` pass.
+
+Output semantics are bit-for-bit those of the seed composition
+``downsample(lift_depth(...), budget)`` + ``centroid_bbox`` (oracle:
+``ref.lift_compact_ref``; property tests in tests/test_lift_compact.py),
+with ONE deliberate divergence: a detection with zero valid pixels gets the
+true ``n = 0`` here, where the seed's ``downsample`` floor (``max(n, 1)``)
+reported a phantom single point at the origin.  Same spirit as the
+documented ``merge_clouds`` fix — the quirky path counted points that do
+not exist; all real clouds are identical.
+
+Two implementations of the same algorithm:
+
+  * ``lift_compact_pallas`` — the TPU deploy kernel.  Grid over pixel
+    tiles; the [D, P, 3] output refs act as cross-step carries (grids are
+    sequential on TPU); the per-tile scatter is a one-hot MXU matmul
+    ([P, T] @ [T, 3] per object), which Mosaic handles natively where a
+    per-element scatter would not.
+  * ``lift_compact_xla`` — the algorithmically identical XLA formulation
+    used off-TPU (ops.lift_compact keys off the backend): the one-hot
+    matmul trick only pays for itself on the MXU; on CPU/GPU the rank
+    composition inverts to a searchsorted gather, back-projecting ONLY the
+    <= D*budget selected pixels.  Neither path ever materializes a
+    [D, HW, 3] intermediate (asserted by jaxpr inspection in the tests and
+    the mapping benchmark).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BIG = 1e9
+Z_EPS = 1e-4          # matches geometry.lift_depth's valid-depth floor
+
+
+def _select_slots(rho, nl, budget: int, lift_cap: int):
+    """Map valid-pixel ranks to output slots under the fused downsample.
+
+    rho: [..., ] exclusive ranks (int32); nl: broadcastable capped counts.
+    Returns (slot, keep): rank rho is emitted to ``slot`` iff ``keep``.
+    Inverts downsample's ``idx(i) = floor(i * n / budget)``: the unique
+    candidate slot for rank r is ceil(r * budget / n), which wins iff it
+    maps back to r.  Below budget the map is the identity.
+    """
+    nl_safe = jnp.maximum(nl, 1)
+    in_range = rho < nl
+    # clip before the multiply: ranks >= nl are never kept, and the clip
+    # keeps rho * budget well inside int32 for any frame size
+    rho_c = jnp.minimum(rho, lift_cap)
+    over = nl > budget
+    slot = jnp.where(over, (rho_c * budget + nl_safe - 1) // nl_safe, rho_c)
+    hit = jnp.where(over, (slot * nl) // budget == rho_c, rho_c < budget)
+    keep = in_range & hit & (slot < budget)
+    return slot, keep
+
+
+# ----------------------------------------------------------------------
+# XLA formulation (CPU/GPU path + the jit'd production path off-TPU)
+# ----------------------------------------------------------------------
+
+def lift_compact_xla(depth: jax.Array, masks: jax.Array,
+                     intrinsics: jax.Array, pose: jax.Array, *,
+                     stride: int = 1, budget: int, lift_cap: int = 4096):
+    """depth: [H, W]; masks: [D, H, W] bool; intrinsics: [fx, fy, cx, cy]
+    at FULL resolution; pose: [4, 4] cam->world.
+
+    Returns (points [D, budget, 3], n [D], centroid [D, 3],
+    bbox_min [D, 3], bbox_max [D, 3]).
+
+    Gather formulation: one cumsum over [D, HW] gives every pixel's rank,
+    a searchsorted inverts rank -> pixel for the <= budget selected ranks,
+    and back-projection runs only on those pixels.
+    """
+    D = masks.shape[0]
+    H, W = depth.shape
+    HW = H * W
+    fx, fy, cx, cy = intrinsics
+    z_flat = depth.reshape(HW)
+    v = masks.reshape(D, HW) & (z_flat > Z_EPS)[None, :]
+    c = jnp.cumsum(v.astype(jnp.int32), axis=1)            # inclusive ranks
+    n = jnp.minimum(c[:, -1], lift_cap)                    # [D]
+    n_out = jnp.minimum(n, budget).astype(jnp.int32)
+
+    i = jnp.arange(budget)
+    r = jnp.where((n > budget)[:, None], (i[None, :] * n[:, None]) // budget,
+                  jnp.broadcast_to(i[None, :], (D, budget)))
+    # pixel of rank r = first j with c[j] == r + 1 (c is nondecreasing)
+    pix = jax.vmap(lambda cd, rd: jnp.searchsorted(cd, rd + 1))(c, r)
+    pix = jnp.minimum(pix, HW - 1)                         # padded ranks only
+
+    zb = z_flat[pix]                                       # [D, budget]
+    xs_full = ((pix % W).astype(jnp.float32) + 0.5) * stride
+    ys_full = ((pix // W).astype(jnp.float32) + 0.5) * stride
+    x = (xs_full - cx) / fx * zb
+    y = (ys_full - cy) / fy * zb
+    pts_cam = jnp.stack([x, y, zb], axis=-1)               # [D, budget, 3]
+    pts_w = pts_cam @ pose[:3, :3].T + pose[:3, 3]
+
+    valid = (i[None, :] < n_out[:, None])[..., None]
+    pts = jnp.where(valid, pts_w, 0.0)
+    denom = jnp.maximum(n_out, 1).astype(jnp.float32)[:, None]
+    cent = jnp.sum(pts, axis=1) / denom
+    mn = jnp.min(jnp.where(valid, pts_w, BIG), axis=1)
+    mx = jnp.max(jnp.where(valid, pts_w, -BIG), axis=1)
+    nz = (n_out > 0)[:, None]
+    return (pts, n_out, cent,
+            jnp.where(nz, mn, 0.0), jnp.where(nz, mx, 0.0))
+
+
+# ----------------------------------------------------------------------
+# Pallas streaming kernel (TPU deploy path)
+# ----------------------------------------------------------------------
+
+def _kernel(depth_ref, masks_ref, nl_ref, params_ref, pts_ref, csum_ref,
+            bmin_ref, bmax_ref, base_scr, *, W: int, stride: int,
+            block_t: int, budget: int, lift_cap: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        pts_ref[...] = jnp.zeros_like(pts_ref)
+        csum_ref[...] = jnp.zeros_like(csum_ref)
+        bmin_ref[...] = jnp.full_like(bmin_ref, BIG)
+        bmax_ref[...] = jnp.full_like(bmax_ref, -BIG)
+        base_scr[...] = jnp.zeros_like(base_scr)
+
+    # --- shared back-projection: once per tile, for ALL objects
+    z = depth_ref[...]                                     # [1, T]
+    fx, fy, cx, cy = (params_ref[0], params_ref[1], params_ref[2],
+                      params_ref[3])
+    j = step * block_t + jax.lax.broadcasted_iota(jnp.int32, (1, block_t), 1)
+    row = j // W
+    xs_full = ((j - row * W).astype(jnp.float32) + 0.5) * stride
+    ys_full = (row.astype(jnp.float32) + 0.5) * stride
+    x = (xs_full - cx) / fx * z
+    y = (ys_full - cy) / fy * z
+    wx = params_ref[4] * x + params_ref[5] * y + params_ref[6] * z + \
+        params_ref[13]
+    wy = params_ref[7] * x + params_ref[8] * y + params_ref[9] * z + \
+        params_ref[14]
+    wz = params_ref[10] * x + params_ref[11] * y + params_ref[12] * z + \
+        params_ref[15]
+    w = jnp.concatenate([wx, wy, wz], axis=0).T            # [T, 3]
+
+    # --- per-object prefix-count destination indexing
+    vi = jnp.where(masks_ref[...] > 0, (z > Z_EPS).astype(jnp.int32), 0)
+    rho = base_scr[...] + jnp.cumsum(vi, axis=1) - vi      # exclusive [D, T]
+    base_scr[...] = base_scr[...] + jnp.sum(vi, axis=1, keepdims=True)
+    slot, keep = _select_slots(rho, nl_ref[...], budget, lift_cap)
+    sel = keep & (vi > 0)
+
+    # --- one-hot MXU scatter: each kept pixel owns exactly one slot, so
+    # the accumulated value is the exact point (0 everywhere else)
+    slots = jax.lax.broadcasted_iota(jnp.int32, (1, 1, budget), 2)
+    oh = (jnp.where(sel, slot, -1)[:, :, None] == slots)   # [D, T, P]
+    pts_ref[...] += jnp.einsum("dtp,tc->dpc", oh.astype(jnp.float32), w,
+                               preferred_element_type=jnp.float32)
+
+    # --- centroid / bbox folded into the same sweep
+    sel3 = sel[:, :, None]
+    wb = w[None, :, :]                                     # [1, T, 3]
+    csum_ref[...] += jnp.sum(jnp.where(sel3, wb, 0.0), axis=1)
+    bmin_ref[...] = jnp.minimum(bmin_ref[...],
+                                jnp.min(jnp.where(sel3, wb, BIG), axis=1))
+    bmax_ref[...] = jnp.maximum(bmax_ref[...],
+                                jnp.max(jnp.where(sel3, wb, -BIG), axis=1))
+
+
+def lift_compact_pallas(depth: jax.Array, masks: jax.Array,
+                        intrinsics: jax.Array, pose: jax.Array, *,
+                        stride: int = 1, budget: int, lift_cap: int = 4096,
+                        block_t: int = 512, interpret: bool | None = None):
+    """Streaming-kernel variant of ``lift_compact_xla`` (same contract).
+
+    The depth tile stream is the only HW-sized traffic: depth + masks pass
+    through VMEM once, outputs are [D, budget, 3] + [D, 3] stats.  The
+    per-object valid-pixel counts (needed up front by the fused downsample
+    indexing) come from one cheap masked reduction outside the kernel.
+    """
+    if interpret is None:
+        from repro.kernels.ops import _interpret
+        interpret = _interpret()
+    D, H, W = masks.shape
+    HW = H * W
+    z_flat = depth.reshape(1, HW)
+    m_flat = masks.reshape(D, HW)
+    counts = jnp.sum(m_flat & (z_flat > Z_EPS), axis=1).astype(jnp.int32)
+    nl = jnp.minimum(counts, lift_cap)[:, None]            # [D, 1]
+    n_out = jnp.minimum(nl[:, 0], budget)
+
+    pad = (-HW) % block_t
+    if pad:
+        z_flat = jnp.pad(z_flat, ((0, 0), (0, pad)))
+        m_flat = jnp.pad(m_flat, ((0, 0), (0, pad)))
+    params = jnp.concatenate([
+        jnp.asarray(intrinsics, jnp.float32).reshape(4),
+        jnp.asarray(pose, jnp.float32)[:3, :3].reshape(9),
+        jnp.asarray(pose, jnp.float32)[:3, 3].reshape(3),
+    ])
+    grid = ((HW + pad) // block_t,)
+    pts, csum, bmin, bmax = pl.pallas_call(
+        functools.partial(_kernel, W=W, stride=stride, block_t=block_t,
+                          budget=budget, lift_cap=lift_cap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t), lambda i: (0, i)),   # depth stream
+            pl.BlockSpec((D, block_t), lambda i: (0, i)),   # mask stream
+            pl.BlockSpec((D, 1), lambda i: (0, 0)),         # counts resident
+            pl.BlockSpec(memory_space=pltpu.SMEM),          # intr + pose
+        ],
+        out_specs=[
+            pl.BlockSpec((D, budget, 3), lambda i: (0, 0, 0)),
+            pl.BlockSpec((D, 3), lambda i: (0, 0)),
+            pl.BlockSpec((D, 3), lambda i: (0, 0)),
+            pl.BlockSpec((D, 3), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((D, budget, 3), jnp.float32),
+            jax.ShapeDtypeStruct((D, 3), jnp.float32),
+            jax.ShapeDtypeStruct((D, 3), jnp.float32),
+            jax.ShapeDtypeStruct((D, 3), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, 1), jnp.int32)],
+        interpret=interpret,
+    )(z_flat, m_flat.astype(jnp.int32), nl, params)
+
+    denom = jnp.maximum(n_out, 1).astype(jnp.float32)[:, None]
+    nz = (n_out > 0)[:, None]
+    return (pts, n_out.astype(jnp.int32), csum / denom,
+            jnp.where(nz, bmin, 0.0), jnp.where(nz, bmax, 0.0))

@@ -12,11 +12,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import lift_compact as _lc
 from repro.kernels import pairwise as _pw
 from repro.kernels import query_topk as _qt
 
 
 def _interpret() -> bool:
+    """Shared backend key: every kernel entry point resolves its
+    ``interpret=None`` default through this helper."""
     return jax.default_backend() != "tpu"
 
 
@@ -39,6 +42,27 @@ def query_topk_bias(qs, embeds, bias, k: int):
     declarative query engine's fused predicate+score+top-k sweep."""
     return _qt.query_topk_bias_pallas(qs, embeds, bias, k,
                                       interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("stride", "budget", "lift_cap"))
+def lift_compact(depth, masks, intrinsics, pose, *, stride: int = 1,
+                 budget: int, lift_cap: int = 4096):
+    """Fused frame-ingest geometry: lift -> compact -> downsample -> stats
+    for all D detections in one pass (the seed ``lift_depth`` +
+    ``downsample`` + ``centroid_bbox`` composition, minus the per-object
+    argsort and the [D, HW, 3] intermediate).
+
+    On TPU this dispatches the Pallas streaming kernel; elsewhere the
+    algorithmically identical XLA gather formulation — the kernel's
+    one-hot-matmul scatter only pays for itself on the MXU, and running it
+    in interpret mode would forfeit the fusion win the pipeline is built
+    around.  Both are parity-tested against ``ref.lift_compact_ref``.
+    """
+    kw = dict(stride=stride, budget=budget, lift_cap=lift_cap)
+    if jax.default_backend() == "tpu":
+        return _lc.lift_compact_pallas(depth, masks, intrinsics, pose,
+                                       interpret=False, **kw)
+    return _lc.lift_compact_xla(depth, masks, intrinsics, pose, **kw)
 
 
 @jax.jit

@@ -40,8 +40,12 @@ def _kernel(a_ref, b_ref, bv_ref, out_ref):
 
 def nearest_dist_pallas(a: jax.Array, b: jax.Array, b_valid: jax.Array, *,
                         block_m: int = 256, block_n: int = 256,
-                        interpret: bool = True):
-    """a: [M, D]; b: [N, D]; b_valid: [N] -> [M] min squared distance."""
+                        interpret: bool | None = None):
+    """a: [M, D]; b: [N, D]; b_valid: [N] -> [M] min squared distance.
+    ``interpret=None`` keys off the backend via ``ops._interpret()``."""
+    if interpret is None:
+        from repro.kernels.ops import _interpret
+        interpret = _interpret()
     M, D = a.shape
     N = b.shape[0]
     pm, pn = (-M) % block_m, (-N) % block_n

@@ -59,7 +59,7 @@ def _merge_topk(run_v, run_i, sim, base, k: int):
 
 def query_topk_pallas(q: jax.Array, embeds: jax.Array, active: jax.Array,
                       k: int, *, block_n: int = 1024,
-                      interpret: bool = True):
+                      interpret: bool | None = None):
     """q: [E]; embeds: [N, E]; active: [N] -> (scores [k], idx [k]).
 
     The Q=1 special case of the multi-query kernel below."""
@@ -91,14 +91,19 @@ def _bias_kernel(q_ref, e_ref, b_ref, vals_ref, idx_ref, *, k: int,
 
 def query_topk_bias_pallas(qs: jax.Array, embeds: jax.Array,
                            bias: jax.Array, k: int, *,
-                           block_n: int = 1024, interpret: bool = True):
+                           block_n: int = 1024,
+                           interpret: bool | None = None):
     """qs: [Q, E]; embeds: [N, E]; bias: [Q, N] -> ([Q, k], [Q, k]).
 
     score[q, n] = qs[q] . embeds[n] + bias[q, n], with bias == NEG masking
     slot n out for query q entirely.  The query batch stays resident in
     VMEM; the embedding table and bias stream through once for ALL Q
     queries (vs Q independent sweeps when vmapping a single-query kernel).
+    ``interpret=None`` keys off the backend via ``ops._interpret()``.
     """
+    if interpret is None:
+        from repro.kernels.ops import _interpret
+        interpret = _interpret()
     Q, E = qs.shape
     N = embeds.shape[0]
     pad = (-N) % block_n
@@ -130,7 +135,8 @@ def query_topk_bias_pallas(qs: jax.Array, embeds: jax.Array,
 
 def query_topk_multi_pallas(qs: jax.Array, embeds: jax.Array,
                             active: jax.Array, k: int, *,
-                            block_n: int = 1024, interpret: bool = True):
+                            block_n: int = 1024,
+                            interpret: bool | None = None):
     """qs: [Q, E]; embeds: [N, E]; active: [N] -> ([Q, k], [Q, k]).
 
     Active-mask compatibility wrapper over the bias kernel: an inactive

@@ -28,6 +28,25 @@ def query_topk_bias_ref(qs: jax.Array, embeds: jax.Array, bias: jax.Array,
     return jax.lax.top_k(sim, k)
 
 
+def lift_compact_ref(depth: jax.Array, masks: jax.Array,
+                     intrinsics: jax.Array, pose: jax.Array, *,
+                     stride: int = 1, budget: int, lift_cap: int = 4096):
+    """Seed-composition oracle for kernels/lift_compact.py: per object,
+    ``lift_depth`` (argsort compaction) -> ``downsample`` -> ``centroid_bbox``
+    exactly as the pre-fusion pipeline ran them.  Returns
+    (points [D, budget, 3], n [D], centroid [D, 3], bbox_min, bbox_max)."""
+    from repro.core import geometry as geo
+
+    def one(mask):
+        pts, n, _ = geo.lift_depth(depth, mask, intrinsics, pose,
+                                   stride=stride, max_points=lift_cap)
+        pts, n = geo.downsample(pts, n, budget)
+        c, mn, mx = geo.centroid_bbox(pts, n)
+        return pts, n, c, mn, mx
+
+    return jax.vmap(one)(masks)
+
+
 def nearest_dist_ref(a: jax.Array, b: jax.Array, b_valid: jax.Array):
     """a: [M, D]; b: [N, D]; b_valid: [N] -> min squared distance per a row.
     (the association/chamfer spatial primitive)"""

@@ -1,0 +1,147 @@
+"""Fused lift->compact->downsample->stats path (kernels/lift_compact) vs the
+seed ``lift_depth`` + ``downsample`` + ``centroid_bbox`` composition:
+deterministic sweeps, a hypothesis property over random masks / strides /
+budgets, the no-[D, HW, 3]-intermediate guard, and fused-vs-staged pipeline
+equivalence."""
+import sys
+from functools import partial
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pipeline import LIFT_BUFFER
+from repro.data.scenes import make_scene, render_frame
+from repro.kernels import lift_compact as lc
+from repro.kernels import ops, ref
+
+
+def _scene_inputs(*, h=120, w=160, r=5, D=8, seed=3):
+    scene = make_scene(n_objects=12, seed=seed)
+    fr = render_frame(scene, 7, h=h, w=w, n_frames=40)
+    depth = jnp.asarray(fr.depth[::r, ::r] if r > 1 else fr.depth)
+    inst_lo = fr.inst[::r, ::r] if r > 1 else fr.inst
+    masks = np.zeros((D,) + inst_lo.shape, bool)
+    for i, o in enumerate(fr.visible_ids[:D]):
+        masks[i] = inst_lo == o
+    return (depth, jnp.asarray(masks), jnp.asarray(fr.intrinsics),
+            jnp.asarray(fr.pose, jnp.float32))
+
+
+def _assert_matches_seed(got, want, counts, *, atol=1e-5):
+    """Point-for-point, count, centroid and bbox equivalence, normalizing
+    the seed's empty-cloud quirk (downsample's max(n, 1) floor reported a
+    phantom zero-point for detections with no valid pixels; the fused path
+    returns the true n = 0 — see kernels/lift_compact.py)."""
+    names = ["points", "n", "centroid", "bbox_min", "bbox_max"]
+    want = [np.asarray(a) for a in want]
+    want[1] = np.where(counts > 0, want[1], 0)
+    for name, g, w in zip(names, got, want):
+        np.testing.assert_allclose(np.asarray(g), w, rtol=1e-5, atol=atol,
+                                   err_msg=name)
+
+
+def _counts(depth, masks):
+    return np.asarray((np.asarray(masks)
+                       & (np.asarray(depth) > lc.Z_EPS)[None]).sum((1, 2)))
+
+
+@pytest.mark.parametrize("r,budget,cap", [
+    (1, 64, 4096), (5, 512, 4096), (2, 128, 256), (3, 32, 64),
+    (5, 2048, 4096), (1, 100, 80),
+])
+def test_fused_matches_seed_composition(r, budget, cap):
+    depth, masks, intr, pose = _scene_inputs(r=r)
+    want = ref.lift_compact_ref(depth, masks, intr, pose, stride=r,
+                                budget=budget, lift_cap=cap)
+    got = ops.lift_compact(depth, masks, intr, pose, stride=r, budget=budget,
+                           lift_cap=cap)
+    _assert_matches_seed(got, want, _counts(depth, masks))
+
+
+def test_fused_matches_seed_random_property():
+    """Random masks / depth holes / strides / budgets / caps: the fused path
+    reproduces the seed composition everywhere (including budget > cap,
+    cap-truncation, and all-invalid objects)."""
+    pytest.importorskip("hypothesis", reason="hypothesis not installed")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 5),
+           st.integers(1, 96), st.integers(8, 160), st.floats(0.2, 0.8))
+    def prop(seed, stride, budget, cap, density):
+        rng = np.random.default_rng(seed)
+        D, H, W = 4, 18, 26
+        depth = jnp.asarray(np.where(rng.random((H, W)) > 0.2,
+                                     rng.uniform(0.3, 8.0, (H, W)),
+                                     0.0).astype(np.float32))
+        masks = jnp.asarray(rng.random((D, H, W)) < density)
+        intr = jnp.asarray([40.0, 42.0, W / 2, H / 2], jnp.float32)
+        q, _ = np.linalg.qr(rng.normal(size=(3, 3)))
+        pose = np.eye(4, dtype=np.float32)
+        pose[:3, :3] = q.astype(np.float32)
+        pose[:3, 3] = rng.uniform(-2, 2, 3).astype(np.float32)
+        pose = jnp.asarray(pose)
+        want = ref.lift_compact_ref(depth, masks, intr, pose, stride=stride,
+                                    budget=budget, lift_cap=cap)
+        got = lc.lift_compact_xla(depth, masks, intr, pose, stride=stride,
+                                  budget=budget, lift_cap=cap)
+        _assert_matches_seed(got, want, _counts(depth, masks), atol=1e-4)
+
+    prop()
+
+
+def test_empty_mask_reports_true_zero():
+    """The documented divergence: no valid pixels -> n = 0 (the seed's
+    downsample floor said 1 phantom point at the origin)."""
+    depth, _, intr, pose = _scene_inputs()
+    masks = jnp.zeros((3,) + depth.shape, bool)
+    pts, n, cent, mn, mx = ops.lift_compact(depth, masks, intr, pose,
+                                            stride=5, budget=32)
+    assert np.asarray(n).tolist() == [0, 0, 0]
+    for a in (pts, cent, mn, mx):
+        np.testing.assert_array_equal(np.asarray(a), 0.0)
+
+
+def test_fused_never_materializes_dhw3():
+    """Acceptance guard: no intermediate in the fused jaxpr reaches
+    [D, HW, 3] elements; the seed composition (positive control) does."""
+    from benchmarks.mapping_latency import (_max_intermediate_elems,
+                                            _seed_lift_composition)
+    r, budget = 5, 512
+    depth, masks, intr, pose = _scene_inputs(r=r, D=16)
+    D = masks.shape[0]
+    hw = int(np.prod(depth.shape))
+    limit = D * hw * 3
+    fused = jax.jit(partial(ops.lift_compact, stride=r, budget=budget,
+                            lift_cap=LIFT_BUFFER))
+    seed = jax.jit(_seed_lift_composition(r, budget))
+    args = (depth, masks, intr, pose)
+    assert _max_intermediate_elems(jax.make_jaxpr(fused)(*args)) < limit
+    assert _max_intermediate_elems(jax.make_jaxpr(seed)(*args)) >= limit
+
+
+def test_pipeline_fused_equals_instrumented():
+    """The one-dispatch ingest_frame path and the instrumented staged path
+    build identical stores (same math, different dispatch granularity)."""
+    from benchmarks.common import build_map
+    srv_f, _, _, times_f = build_map(n_objects=12, frames=25, h=120, w=160)
+    srv_i, _, _, times_i = build_map(n_objects=12, frames=25, h=120, w=160,
+                                     instrument=True)
+    for f in ["active", "n_points", "label", "obs_count", "ids", "version"]:
+        np.testing.assert_array_equal(np.asarray(getattr(srv_f.store, f)),
+                                      np.asarray(getattr(srv_i.store, f)),
+                                      err_msg=f)
+    np.testing.assert_allclose(np.asarray(srv_f.store.points),
+                               np.asarray(srv_i.store.points), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(srv_f.store.centroid),
+                               np.asarray(srv_i.store.centroid), atol=1e-5)
+    # the fused path reports a single ingest wall; the staged path reports
+    # the per-stage decomposition — both feed total_ms
+    warm_f, warm_i = times_f[2], times_i[2]
+    assert warm_f.ingest_ms > 0 and warm_f.lift_ms == 0
+    assert warm_i.lift_ms > 0 and warm_i.ingest_ms == 0

@@ -50,3 +50,54 @@ def test_deferral_gate_reduces_detections():
     srv, _, _, _ = build_map(knobs=kn_gate, n_objects=20, frames=30,
                              h=120, w=160)
     assert srv.deferred > 0
+
+
+def test_mapping_gate_scales_to_render_resolution():
+    """Regression pin for the unified gate (depth.mapping_gate): bbox areas
+    measured at a simulated render resolution are rescaled to full-sensor
+    (720p) units before comparing against min_mapping_bbox_area, so the
+    knob default behaves identically at any resolution."""
+    import numpy as np
+    from repro.core import depth as depth_mod
+
+    kn = default_knobs(depth_downsampling_ratio=5, min_mapping_bbox_area=2000)
+    # at 240x320 the rescale factor is (720*1280)/(240*320) = 12:
+    # area 166 -> 1992 (defer), area 167 -> 2004 (keep)
+    got = depth_mod.mapping_gate(np.array([166, 167]), kn,
+                                 frame_pixels=240 * 320)
+    assert got.tolist() == [False, True]
+    # at native 720p the knob applies unscaled
+    got = depth_mod.mapping_gate(np.array([1999, 2000]), kn,
+                                 frame_pixels=720 * 1280)
+    assert got.tolist() == [False, True]
+    # no depth downsampling -> nothing to defer for, any area passes
+    kn_full = default_knobs(depth_downsampling_ratio=1,
+                            min_mapping_bbox_area=2000)
+    assert bool(depth_mod.mapping_gate(4, kn_full, frame_pixels=240 * 320))
+
+
+def test_mapping_gate_mask_matches_detect_policy():
+    """mapping_gate_mask (mask convenience wrapper) and the pipeline's
+    vectorized _detect agree — the gate logic lives in exactly one place."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import depth as depth_mod
+    from repro.core import MappingServer
+    from repro.data.scenes import make_scene, render_frame
+    from repro.perception.embedder import OracleEmbedder
+
+    kn = default_knobs(depth_downsampling_ratio=5, min_mapping_bbox_area=4000)
+    scene = make_scene(n_objects=20, seed=0)
+    classes = {o.oid: o.class_id for o in scene.objects}
+    srv = MappingServer(knobs=kn, embedder=OracleEmbedder(embed_dim=32))
+    fr = render_frame(scene, 10, h=120, w=160, n_frames=40)
+    before = srv.deferred
+    cids, _ = srv._detect(fr, classes)
+    want_kept = 0
+    for oid in fr.visible_ids:
+        mask_full = fr.inst == oid
+        if bool(np.asarray(depth_mod.mapping_gate_mask(
+                jnp.asarray(mask_full), kn))):
+            want_kept += 1
+    assert len(cids) == min(want_kept, kn.max_detections_per_frame)
+    assert srv.deferred - before == len(fr.visible_ids) - want_kept
