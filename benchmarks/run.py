@@ -15,7 +15,8 @@ sys.path.insert(0, str(ROOT))
 
 from benchmarks import (downstream_bw, fleet_scale, ingest_tick,
                         local_map_scale, mapping_latency, power_model,
-                        query_engine, query_latency, roofline, upstream_bw)
+                        query_engine, query_latency, roofline,
+                        scenario_suite, upstream_bw)
 
 SUITES = {
     "tab4_fig3_mapping": mapping_latency.run,
@@ -28,6 +29,7 @@ SUITES = {
     "ingest_tick": ingest_tick.run,
     "fleet_scale": fleet_scale.run,
     "query_engine": query_engine.run,
+    "scenario_suite": scenario_suite.run,
 }
 
 

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import geometry as geo
+from repro.core import store as store_mod
 from repro.core.store import ObjectStore
 
 
@@ -109,11 +110,16 @@ def associate(store: ObjectStore, det: Detections, *, frame: jax.Array,
     )(store.points[j_star], n_a, det.points, det.n_points)
     nc, nmn, nmx = jax.vmap(geo.centroid_bbox)(npts, nn)
 
-    # --- 3. free-slot assignment for inserts in detection order
+    # --- 3. free-slot assignment for inserts in detection order.  A slot
+    # is free only when neither live nor tombstoned: a pending deletion
+    # still owns its slot until the protocol retires it
+    # (store.release_tombstones) — reusing it would hide the new object
+    # behind clients' synced versions.
+    occupied = store.active | store_mod.deleted_mask(store)
     do_insert = det.valid & ~is_match
     rank = jnp.maximum(jnp.cumsum(do_insert) - 1, 0)            # [D]
-    free_order = jnp.argsort(store.active)      # stable: free slots, asc idx
-    n_free = (~store.active).sum()
+    free_order = jnp.argsort(occupied)          # stable: free slots, asc idx
+    n_free = (~occupied).sum()
     ins_ok = do_insert & (jnp.cumsum(do_insert) - 1 < n_free)
     ins_slot = free_order[jnp.minimum(rank, cap - 1)]
 

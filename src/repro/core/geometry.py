@@ -72,6 +72,29 @@ def downsample(points: jax.Array, n: jax.Array, budget: int):
     return jnp.where(valid[:, None], out, 0.0), n_out.astype(jnp.int32)
 
 
+def downsample_dyn(points: jax.Array, n: jax.Array, budget: jax.Array,
+                   out_cap: int):
+    """``downsample`` with a *traced* per-call budget (<= static out_cap).
+
+    The budget only shapes the valid prefix, not the output buffer, so it
+    can vary per row without retracing — updates._gather_batch uses this to
+    honor per-class client point budgets (Knobs.class_point_overrides) in
+    one gather over a mixed-class packet.  For budget == out_cap this is
+    exactly ``downsample(points, n, out_cap)``.
+    Returns (points [out_cap, 3], n_out []).
+    """
+    P = points.shape[0]
+    n = jnp.maximum(n, 1)
+    b = jnp.maximum(jnp.minimum(budget, out_cap), 1)
+    ar = jnp.arange(out_cap)
+    idx = jnp.where(n > b, (ar * n) // b, ar)
+    idx = jnp.minimum(idx, P - 1)
+    out = points[idx]
+    n_out = jnp.minimum(n, b)
+    valid = ar < n_out
+    return jnp.where(valid[:, None], out, 0.0), n_out.astype(jnp.int32)
+
+
 def centroid_bbox(points: jax.Array, n: jax.Array):
     """(centroid [3], bbox_min [3], bbox_max [3]) of a masked cloud."""
     P = points.shape[0]

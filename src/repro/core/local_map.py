@@ -75,6 +75,8 @@ class ObjectUpdate(NamedTuple):
     n_points: jax.Array   # [] int32
     centroid: jax.Array   # [3] f32
     version: jax.Array    # [] int32
+    deleted: jax.Array = None   # [] bool — tombstone row: the device frees
+    #                             the slot and retires the id (None = live)
 
 
 class UpdateBatch(NamedTuple):
@@ -93,11 +95,18 @@ class UpdateBatch(NamedTuple):
     centroid: jax.Array   # [U, 3] f32
     version: jax.Array    # [U] int32
     valid: jax.Array      # [U] bool — padding mask
+    deleted: jax.Array = None   # [U] bool — tombstone rows (None = all live)
 
 
 def _admit_one(m: LocalMap, u: ObjectUpdate, priority: jax.Array,
                enabled: jax.Array) -> LocalMap:
-    """Core admission/eviction step shared by the single and batched paths."""
+    """Core admission/eviction step shared by the single and batched paths.
+
+    A tombstone row (``u.deleted``) frees the matching slot instead of
+    admitting: id retired, entry deactivated — the slot is immediately
+    reusable by later rows of the same batch (scan order).  Tombstones for
+    ids the map never retained are no-ops."""
+    is_del = jnp.asarray(False) if u.deleted is None else u.deleted
     # existing entry?
     hit = (m.ids == u.oid) & m.active
     has = hit.any()
@@ -111,7 +120,18 @@ def _admit_one(m: LocalMap, u: ObjectUpdate, priority: jax.Array,
     can_evict = priority > evict_pri[slot_evict]
     slot = jnp.where(has, slot_existing,
                      jnp.where(has_free, slot_free, slot_evict))
-    admit = (has | has_free | can_evict) & enabled
+    admit = (has | has_free | can_evict) & enabled & ~is_del
+    erase = is_del & has & enabled
+
+    def free_slot(m: LocalMap) -> LocalMap:
+        return m._replace(
+            ids=m.ids.at[slot_existing].set(0),
+            active=m.active.at[slot_existing].set(False),
+            version=m.version.at[slot_existing].set(0),
+            n_points=m.n_points.at[slot_existing].set(0),
+            priority=m.priority.at[slot_existing].set(0.0))
+
+    m = jax.lax.cond(erase, free_slot, lambda x: x, m)
 
     def write(m: LocalMap) -> LocalMap:
         return LocalMap(
@@ -147,7 +167,8 @@ def apply_updates_batch(m: LocalMap, batch: UpdateBatch,
         row, pri = x
         u = ObjectUpdate(oid=row.oid, embed=row.embed, label=row.label,
                          points=row.points, n_points=row.n_points,
-                         centroid=row.centroid, version=row.version)
+                         centroid=row.centroid, version=row.version,
+                         deleted=row.deleted)
         return _admit_one(m, u, pri, row.valid), None
 
     m, _ = jax.lax.scan(step, m, (batch, priorities))

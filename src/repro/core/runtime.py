@@ -170,38 +170,68 @@ class DeviceClient:
 
 # ---------------------------------------------------------------------------
 @dataclass
+class OutageBuffer:
+    """O(1) stand-in for the packets a client missed during an outage.
+
+    The sync vector is the real buffer: it already encodes exactly what the
+    client is owed, and ``flush_buffer`` re-collects against the CURRENT
+    store so intermediate versions coalesce into one packet.  Retaining the
+    per-tick packets themselves (the seed behavior) grew without bound over
+    a long outage for zero information gain."""
+    since_tick: int                 # first tick the client missed
+    ticks: int = 0                  # how many update ticks were skipped
+
+    def __len__(self) -> int:       # truthiness/len compat with the old list
+        return 1 if self.ticks else 0
+
+
+@dataclass
 class CloudService:
     """Server side of the split: map store + per-client sync + SQ engine."""
     knobs: Knobs
     store_ref: object                      # MappingServer (owns the store)
     sync: SyncState = None
-    buffered: list = field(default_factory=list)   # packets queued in outage
+    buffered: OutageBuffer = None          # coalesced outage state (O(1))
     tick: int = 0
 
     def __post_init__(self):
         if self.sync is None:
             self.sync = init_sync(self.knobs.server_capacity)
+        if self.buffered is None:
+            self.buffered = OutageBuffer(since_tick=0)
         self._query = lambda st, e: query_mod.execute_query(
             st, query_mod.Query(embed=e, k=5))
 
     def update_tick(self, *, network_up: bool, full_map: bool = False,
                     priorities=None):
         """Run one update tick; returns the packet that reached the device
-        (None during outage — buffered for reconnection, Sec. 3.2)."""
+        (None during outage — the tick coalesces into the O(1) OutageBuffer
+        and the sync vector stays put, so reconnection ships one packet
+        covering everything missed, Sec. 3.2)."""
+        if not network_up:
+            # the sync vector is untouched and nothing can be delivered:
+            # don't even build a packet (the seed collected one per outage
+            # tick and queued it, growing without bound)
+            if self.buffered.ticks == 0:
+                self.buffered.since_tick = self.tick
+            self.buffered.ticks += 1
+            self.tick += 1
+            return None
         packet, new_sync = collect_updates(
             self.store_ref.store, self.sync, self.knobs, tick=self.tick,
             full_map=full_map, priorities=priorities)
         self.tick += 1
-        if not network_up:
-            self.buffered.append(packet)
-            return None
         self.sync = new_sync
+        # a delivered tick IS the reconnect flush (the collect coalesced
+        # everything the sync vector was owed) — close the outage window
+        if self.buffered.ticks:
+            self.buffered = OutageBuffer(since_tick=self.tick)
         return packet
 
     def flush_buffer(self):
         """Reconnection: pending updates apply at once (re-collected against
         the current store so intermediate versions coalesce)."""
-        self.buffered.clear()
+        self.buffered = OutageBuffer(since_tick=self.tick)
         packet, self.sync = collect_updates(
             self.store_ref.store, self.sync, self.knobs, tick=self.tick)
         return packet

@@ -8,11 +8,20 @@ count is the capacity knob, `active` masks live slots.
 ``version`` increments on any semantically meaningful change (new geometry
 angle, embedding update) — the incremental-update protocol (updates.py) ships
 exactly the objects whose version advanced past the client's synced vector.
+
+Map *shrinkage* is first-class: ``remove_objects`` turns a live slot into a
+version-bumped **tombstone** (``active=False, deleted=True``, id and centroid
+retained so the update protocol and zone routing can still address it).  A
+tombstone occupies its slot — association must not hand it to a new insert,
+or a version-1 occupant would hide behind clients' higher synced versions —
+until ``release_tombstones`` retires it once every sync vector has shipped
+the deletion.
 """
 from __future__ import annotations
 
 from typing import NamedTuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -33,6 +42,8 @@ class ObjectStore(NamedTuple):
     version: jax.Array      # [cap] int32
     last_seen: jax.Array    # [cap] int32 frame index of last observation
     next_id: jax.Array      # [] int32
+    deleted: jax.Array = None   # [cap] bool — tombstoned slots (removal
+    #                             pending propagation; see remove_objects)
 
 
 def init_store(capacity: int, embed_dim: int, max_points: int) -> ObjectStore:
@@ -51,7 +62,16 @@ def init_store(capacity: int, embed_dim: int, max_points: int) -> ObjectStore:
         version=jnp.zeros((cap,), jnp.int32),
         last_seen=jnp.zeros((cap,), jnp.int32),
         next_id=jnp.ones((), jnp.int32),
+        deleted=jnp.zeros((cap,), bool),
     )
+
+
+def deleted_mask(store: ObjectStore) -> jax.Array:
+    """[cap] bool tombstone mask; stores built before the field existed
+    (deleted=None) read as all-False."""
+    if store.deleted is None:
+        return jnp.zeros_like(store.active)
+    return store.deleted
 
 
 def store_from_knobs(knobs: Knobs, embed_dim: int) -> ObjectStore:
@@ -96,4 +116,72 @@ def n_active(store: ObjectStore) -> jax.Array:
 
 
 def store_nbytes(store: ObjectStore) -> int:
-    return int(sum(x.size * x.dtype.itemsize for x in store))
+    return int(sum(x.size * x.dtype.itemsize for x in store
+                   if x is not None))
+
+
+# ---------------------------------------------------------------------------
+# Map shrinkage: tombstone removal + slot retirement (paper Sec. 3.2 —
+# downstream bandwidth must scale with map CHANGES, and a removal is a
+# change like any other).
+# ---------------------------------------------------------------------------
+@jax.jit
+def _tombstone_slots(store: ObjectStore, slots: jax.Array,
+                     valid: jax.Array) -> ObjectStore:
+    """Tombstone store rows ``slots`` (padding rows dropped via OOB index):
+    active -> False, deleted -> True, version bump so the removal ships."""
+    cap = store.ids.shape[0]
+    tgt = jnp.where(valid & store.active[jnp.minimum(slots, cap - 1)],
+                    slots, cap)
+    return store._replace(
+        active=store.active.at[tgt].set(False, mode="drop"),
+        deleted=deleted_mask(store).at[tgt].set(True, mode="drop"),
+        version=store.version.at[tgt].add(1, mode="drop"),
+        n_points=store.n_points.at[tgt].set(0, mode="drop"))
+
+
+def remove_objects(store: ObjectStore, oids) -> ObjectStore:
+    """Remove live objects by id: each matching slot becomes a tombstone
+    (id, centroid and version retained; geometry zeroed).  The slot stays
+    occupied until release_tombstones — reusing it immediately would hide
+    the next occupant behind clients' synced versions.  No-op for unknown
+    or already-dead ids."""
+    oids = np.atleast_1d(np.asarray(oids, np.int64))
+    ids = np.asarray(store.ids)
+    act = np.asarray(store.active)
+    hit = np.isin(ids, oids) & act
+    slots = np.nonzero(hit)[0]
+    if not len(slots):
+        return store
+    from repro.core.updates import _bucket   # local import: cycle-free
+    B = _bucket(len(slots))
+    pad = np.zeros((B,), np.int32)
+    pad[:len(slots)] = slots
+    return _tombstone_slots(store, jnp.asarray(pad),
+                            jnp.asarray(np.arange(B) < len(slots)))
+
+
+def tombstone_slots(store: ObjectStore) -> np.ndarray:
+    """Host-side indices of tombstoned slots (propagation pending)."""
+    return np.nonzero(np.asarray(deleted_mask(store)))[0]
+
+
+def release_tombstones(store: ObjectStore, slots=None) -> ObjectStore:
+    """Retire tombstones: clear id/version/deleted so the slot is reusable.
+
+    Call only once every client's sync vector covers the tombstone's
+    version (the deletion has shipped) — the caller must then also reset
+    those slots' synced versions (updates.SyncState rows /
+    SessionManager.reset_slots) before an insert reuses them.  ``slots``
+    defaults to every tombstone."""
+    if slots is None:
+        slots = tombstone_slots(store)
+    slots = np.atleast_1d(np.asarray(slots, np.int64))
+    if not len(slots):
+        return store
+    s = jnp.asarray(slots)
+    return store._replace(
+        ids=store.ids.at[s].set(0),
+        deleted=deleted_mask(store).at[s].set(False),
+        version=store.version.at[s].set(0),
+        obs_count=store.obs_count.at[s].set(0))

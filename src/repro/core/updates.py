@@ -29,16 +29,23 @@ import jax.numpy as jnp
 from repro.core import geometry as geo
 from repro.core.knobs import Knobs
 from repro.core.local_map import ObjectUpdate, UpdateBatch
-from repro.core.store import ObjectStore
+from repro.core.store import ObjectStore, deleted_mask
 
 # wire format per object: id(4) + label(2) + version(4) + n_points(2)
-# + centroid(3*4) + embedding(E*2, fp16) + points(n*3*2, fp16)
+# + centroid(3*4) + embedding(E*2, fp16) + points(n*3*2, fp16).
+# The deleted flag rides the sign bit of the n_points field, so live rows
+# cost no extra bytes; a tombstone row ships header-only minus the payload
+# fields it has no use for: id(4) + version(4) + flagged n_points(1) = 9 B.
 _HEADER_B = 4 + 2 + 4 + 2 + 12
+TOMBSTONE_NBYTES = 9
 
 _MIN_BUCKET = 8
 
 
-def update_nbytes(embed_dim: int, n_points: int) -> int:
+def update_nbytes(embed_dim: int, n_points: int, *,
+                  deleted: bool = False) -> int:
+    if deleted:
+        return TOMBSTONE_NBYTES
     return _HEADER_B + 2 * embed_dim + 6 * int(n_points)
 
 
@@ -49,17 +56,42 @@ def _bucket(n: int) -> int:
     return b
 
 
-@functools.partial(jax.jit, static_argnames=("budget",))
+@functools.lru_cache(maxsize=None)
+def class_budget_table(knobs: Knobs, n_labels: int = 256) -> np.ndarray:
+    """[n_labels] per-class client point budgets: ``class_point_overrides``
+    where declared (capped at the client buffer size), the default
+    elsewhere.  Lookup is clamped, so out-of-range class ids get the
+    default budget.  Cached per (frozen) Knobs — collect_updates reads it
+    every tick."""
+    table = np.full((n_labels,), knobs.max_object_points_client, np.int32)
+    for cid, pts in knobs.class_point_overrides:
+        if 0 <= cid < n_labels:
+            table[cid] = min(int(pts), knobs.max_object_points_client)
+    table.setflags(write=False)        # shared across ticks: freeze it
+    return table
+
+
+@functools.partial(jax.jit, static_argnames=("out_cap",))
 def _gather_batch(store: ObjectStore, idx: jax.Array, valid: jax.Array,
-                  budget: int) -> UpdateBatch:
-    """Build the SoA packet body for slots ``idx`` in one dispatch."""
-    pts, n = jax.vmap(lambda p, m: geo.downsample(p, m, budget))(
-        store.points[idx], store.n_points[idx])
+                  budgets: jax.Array, out_cap: int) -> UpdateBatch:
+    """Build the SoA packet body for slots ``idx`` in one dispatch.
+
+    ``budgets`` [U] is the per-row point budget (per-class overrides
+    resolved by the caller); rows keep at most that many points inside the
+    shared [U, out_cap, 3] buffer, so a mixed-class packet is still one
+    gather and the jit keys only on (out_cap, bucket size).  Tombstone rows
+    ship no geometry (n_points forced to 0)."""
+    del_rows = deleted_mask(store)[idx]
+    pts, n = jax.vmap(lambda p, m, b: geo.downsample_dyn(p, m, b, out_cap))(
+        store.points[idx], store.n_points[idx], budgets)
+    n = jnp.where(del_rows, 0, n)
+    pts = jnp.where(del_rows[:, None, None], 0.0, pts)
     cent = jax.vmap(lambda p, m: geo.centroid_bbox(p, m)[0])(pts, n)
+    cent = jnp.where(del_rows[:, None], store.centroid[idx], cent)
     return UpdateBatch(
         oid=store.ids[idx], embed=store.embed[idx], label=store.label[idx],
         points=pts.astype(jnp.float16), n_points=n, centroid=cent,
-        version=store.version[idx], valid=valid)
+        version=store.version[idx], valid=valid, deleted=del_rows)
 
 
 @dataclass
@@ -77,8 +109,20 @@ class UpdatePacket:
         b = self.batch
         return [ObjectUpdate(oid=b.oid[i], embed=b.embed[i], label=b.label[i],
                              points=b.points[i], n_points=b.n_points[i],
-                             centroid=b.centroid[i], version=b.version[i])
+                             centroid=b.centroid[i], version=b.version[i],
+                             deleted=None if b.deleted is None
+                             else b.deleted[i])
                 for i in range(self.count)]
+
+    @property
+    def deleted_oids(self) -> list:
+        """Object ids tombstoned by this packet (empty for live-only)."""
+        if self.batch is None or self.count == 0 \
+                or self.batch.deleted is None:
+            return []
+        d = np.asarray(self.batch.deleted)[:self.count]
+        o = np.asarray(self.batch.oid)[:self.count]
+        return [int(x) for x in o[d]]
 
 
 class SyncState(NamedTuple):
@@ -96,23 +140,42 @@ def collect_updates(store: ObjectStore, sync: SyncState, knobs: Knobs, *,
                     max_updates: int | None = None):
     """Build the update packet for one tick.
 
+    Live rows ship when new-or-modified past the sync vector and past the
+    min-obs transient filter; tombstones ship to exactly the clients whose
+    sync vector ever covered the object (synced > 0 — a client that never
+    received it has nothing to delete) and jump the priority queue, since a
+    freed client slot is worth more than a refreshed one.  Slots that are
+    fully empty (retired tombstones, pruned transients) reset their sync
+    entry so a future occupant is never hidden behind a stale version.
+
     full_map=True reproduces the device-cloud baseline (whole scene each
     tick).  Returns (packet, new_sync).
     """
     active = np.asarray(store.active)
     version = np.asarray(store.version)
     obs = np.asarray(store.obs_count)
-    changed = active & (obs >= knobs.min_obs_before_sync)
+    dele = np.asarray(deleted_mask(store))
+    live = active & (obs >= knobs.min_obs_before_sync)
+    tomb = dele & (sync.synced_version > 0) \
+        & (version > sync.synced_version)
     if not full_map:
-        changed &= version > sync.synced_version
+        live &= version > sync.synced_version
+    changed = live | tomb
     idx = np.nonzero(changed)[0]
     if priorities is not None and len(idx):
-        idx = idx[np.argsort(-priorities[idx], kind="stable")]
+        pri = priorities[idx].astype(np.float64)
+        pri[tomb[idx]] = np.inf        # deletions first: they free slots
+        idx = idx[np.argsort(-pri, kind="stable")]
+    elif tomb.any() and len(idx):
+        idx = idx[np.argsort(~tomb[idx], kind="stable")]
     if max_updates is not None:
         idx = idx[:max_updates]
 
     new_synced = sync.synced_version.copy()
     new_synced[idx] = version[idx]
+    # empty slots (never assigned, retired, or pruned-before-shipping) must
+    # not pin a stale synced version against their next occupant
+    new_synced[~active & ~dele] = 0
     new_sync = SyncState(synced_version=new_synced)
     U = len(idx)
     if U == 0:
@@ -123,11 +186,17 @@ def collect_updates(store: ObjectStore, sync: SyncState, knobs: Knobs, *,
     idx_pad = np.zeros((Ub,), np.int64)
     idx_pad[:U] = idx
     valid = np.arange(Ub) < U
+    budgets = class_budget_table(knobs)[
+        np.clip(np.asarray(store.label)[idx_pad], 0, 255)]
     batch = _gather_batch(store, jnp.asarray(idx_pad), jnp.asarray(valid),
+                          jnp.asarray(budgets),
                           knobs.max_object_points_client)
-    # exact per-object byte accounting (padding rows excluded)
+    # exact per-object byte accounting (padding rows excluded): live rows
+    # at full wire size, tombstones at the 9-byte header
     n_host = np.asarray(batch.n_points)[:U]
+    n_tomb = int(tomb[idx].sum())
     E = store.embed.shape[1]
-    nbytes = U * (_HEADER_B + 2 * E) + 6 * int(n_host.sum())
+    nbytes = (U - n_tomb) * (_HEADER_B + 2 * E) + 6 * int(n_host.sum()) \
+        + n_tomb * TOMBSTONE_NBYTES
     return UpdatePacket(batch=batch, count=U, nbytes=nbytes, tick=tick), \
         new_sync

@@ -11,22 +11,23 @@ join/leave churn mid-session, per-client poses wandering the room (zone
 subscriptions follow), and cross-client queries — declarative
 `core.query.Query` specs (open-vocab similarity + radius-around-pose) —
 multiplexed through `serving.batching.BatchScheduler` over the fused
-query engine.  Each
-client's delivery/ingest/mode step is `core.runtime.ClientSession` — the
-same code path as the single-client example.
+query engine.  Since PR 5 the simulator is a THIN WRAPPER: it translates
+its seeded fleet parameters into a declarative `sim.Scenario` and replays
+it through `sim.ScenarioEngine` (the shared discrete-event session loop),
+keeping only the legacy stats-dict surface and the BatchScheduler query
+hook.  Each client's delivery/ingest/mode step is
+`core.runtime.ClientSession` — the same code path as the single-client
+example.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
 from repro.core.knobs import Knobs
 from repro.core.query import Query, QueryResult, compile_query
-from repro.core.runtime import ClientSession, DeviceClient, NetworkModel
+from repro.core.runtime import ClientSession, NetworkModel
 from repro.core.store import ObjectStore
 from repro.server.session import FleetPacket, SessionManager
 from repro.server.zones import ZoneGrid, ZoneShardedStore
@@ -129,7 +130,7 @@ class FleetServer:
 @dataclass
 class SimClient:
     cid: int
-    session: ClientSession
+    session: ClientSession             # the engine-owned per-tick step
     anchor: np.ndarray                 # wander center
     radius: float                      # zone-subscription radius
     join_tick: int = 0
@@ -137,6 +138,7 @@ class SimClient:
     active: bool = False
     queries: int = 0
     lq_ticks: int = 0
+    net: NetworkModel = None
 
     def pose_at(self, t: float) -> np.ndarray:
         ang = 0.15 * t + 0.7 * self.cid
@@ -187,7 +189,6 @@ class FleetSimulator:
         half = self.grid.zone_size * max(self.grid.nx, self.grid.nz) / 2
         self.clients = []
         for c in range(self.n_clients):
-            dev = DeviceClient(knobs=self.knobs, embed_dim=self.embed_dim)
             net = _heterogeneous_net(rng, self.tick_s, n_ticks)
             anchor = np.array([rng.uniform(-half * 0.8, half * 0.8), 1.5,
                                rng.uniform(-half * 0.8, half * 0.8)],
@@ -198,11 +199,11 @@ class FleetSimulator:
                 join = int(rng.integers(1, max(n_ticks // 2, 2)))
             if rng.random() < self.churn / 2:
                 leave = int(rng.integers(n_ticks // 2, n_ticks))
+            # session is attached after the engine builds it (the engine
+            # owns DeviceClient/ClientSession; SimClient is the public view)
             self.clients.append(SimClient(
-                cid=c, session=ClientSession(dev=dev, net=net,
-                                             knobs=self.knobs,
-                                             dt=self.tick_s),
-                anchor=anchor, radius=1.5, join_tick=join, leave_tick=leave))
+                cid=c, session=None, anchor=anchor, radius=1.5,
+                join_tick=join, leave_tick=leave, net=net))
 
     def _build_scheduler(self, get_map):
         from repro.serving.batching import BatchScheduler, make_query_step_fn
@@ -210,96 +211,82 @@ class FleetSimulator:
         return BatchScheduler(batch_size=bs,
                               step_fn=make_query_step_fn(get_map, pad_to=bs))
 
+    def _scenario(self, n_ticks: int):
+        """Declarative Scenario mirroring this simulator's seeded fleet —
+        the engine replays it; the simulator itself only maps results back
+        to the legacy stats dict."""
+        from repro.sim.scenario import (ClientSpec, GridSpec, NetTrace,
+                                        PoseTrack, QueryPlan, Scenario)
+        specs = tuple(ClientSpec(
+            cid=cl.cid,
+            net=NetTrace(rtt_ms=cl.net.rtt_ms,
+                         bandwidth_mbps=cl.net.bandwidth_mbps,
+                         outages=cl.net.outages),
+            track=PoseTrack(anchor=tuple(float(x) for x in cl.anchor),
+                            orbit_radius=0.8, angular_rate=0.15,
+                            phase=0.7 * cl.cid),
+            join_tick=cl.join_tick, leave_tick=cl.leave_tick,
+            subscribe_radius=cl.radius) for cl in self.clients)
+        room = self.grid.zone_size * max(self.grid.nx, self.grid.nz)
+        return Scenario(
+            seed=self.seed, n_ticks=n_ticks, tick_s=self.tick_s,
+            embed_dim=self.embed_dim, knobs=self.knobs,
+            grid=GridSpec(room=room, nx=self.grid.nx, nz=self.grid.nz),
+            budget=self.budget, clients=specs,
+            query=QueryPlan(prob=self.query_prob, radius=self.query_radius,
+                            k=3))
+
     def run(self, *, n_ticks: int = 30, mapper=None, frames=None,
             embedder=None, classes=None, key=None) -> dict:
-        """Run the fleet.  ``mapper`` + ``frames`` drive the mapping
-        frontend; pass mapper=None with a pre-filled store via
-        ``self.server.refresh(store)`` inside a custom loop instead."""
+        """Run the fleet: a thin wrapper over sim.ScenarioEngine.
+
+        ``mapper`` + ``frames`` drive the mapping frontend; SQ queries ride
+        ``serving.BatchScheduler`` via the engine's query hook (the
+        continuous-batching path the paper's server uses), so the scheduler
+        stats (hedges/served) stay observable.  Pass mapper=None with a
+        pre-filled store via ``self.server.refresh(store)`` inside a custom
+        loop instead."""
+        from repro.sim.engine import ScenarioEngine
         self._build_clients(n_ticks)
         self.scheduler = self._build_scheduler(
             lambda: mapper.store if mapper else None)
-        frames = list(frames) if frames is not None else []
-        key = key if key is not None else jax.random.key(self.seed)
+        hedges0 = self.scheduler.hedge_count
 
-        tick_lat, down_total, hedges0 = [], 0, self.scheduler.hedge_count
-        for i in range(n_ticks):
-            t = i * self.tick_s
-            active_labels = np.zeros((0,), np.int32)
-            if mapper is not None:
-                if i < len(frames):
-                    mapper.process_frame(frames[i], classes,
-                                         jax.random.fold_in(key, i))
-                    self.server.refresh(mapper.store)
-                active_labels = np.asarray(mapper.store.label)[
-                    np.asarray(mapper.store.active)]
+        def submit_sq(cid, t, spec):
+            self.scheduler.submit(spec)
 
-            # churn + pose advance
-            deliverable = np.zeros((self.n_clients,), bool)
-            for cl in self.clients:
-                if not cl.active and cl.join_tick <= i < cl.leave_tick:
-                    cl.active = True
-                    self.server.join(cl.cid, cl.pose_at(t), cl.radius)
-                elif cl.active and i >= cl.leave_tick:
-                    cl.active = False
-                    self.server.leave(cl.cid)
-                if cl.active:
-                    pos = cl.pose_at(t)
-                    cl.session.user_pos = jnp.asarray(pos)
-                    self.server.set_client_pose(cl.cid, pos, cl.radius)
-                    deliverable[cl.cid] = cl.session.net.is_up(t)
-
-            t0 = time.perf_counter()
-            packets = self.server.tick(deliverable)
-            tick_lat.append((time.perf_counter() - t0) * 1e3)
-
-            # client side: shared per-tick step (delivery + ingest + mode)
-            per_client = self.server.per_client_nbytes(packets)
-            down_total += int(per_client.sum())
-            for cl in self.clients:
-                if not cl.active:
-                    continue
-                mode = None
-                for _, pkt in packets:
-                    mode = cl.session.step(t, pkt.packet_for(cl.cid))
-                if mode is None:
-                    mode = cl.session.step(t)
-                # cross-client queries: SQ rides the shared batch scheduler
-                # as a declarative spec — open-vocab similarity AND a
-                # radius-around-the-client spatial predicate, one dispatch
-                if embedder is not None and len(active_labels) \
-                        and np.random.default_rng(self.seed + i * 131
-                                                  + cl.cid).random() \
-                        < self.query_prob:
-                    cid_q = int(active_labels[(cl.cid + i)
-                                              % len(active_labels)])
-                    if mode == "SQ":
-                        self.scheduler.submit(Query(
-                            embed=embedder.embed_text(cid_q),
-                            near=(jnp.asarray(cl.pose_at(t)),
-                                  jnp.asarray(self.query_radius,
-                                              jnp.float32)),
-                            k=3))
-                        cl.queries += 1
-                    else:
-                        cl.lq_ticks += 1
-            if mapper is not None:
-                self.scheduler.step()
+        engine = ScenarioEngine(
+            self._scenario(n_ticks), mapper=mapper,
+            frames=list(frames) if frames is not None else None,
+            classes=classes, embedder=embedder, server=self.server,
+            query_hook=submit_sq if mapper is not None else None,
+            tick_hook=(lambda t: self.scheduler.step())
+            if mapper is not None else None)
+        for cl in self.clients:            # expose engine-owned sessions
+            cl.session = engine.sessions[cl.cid]
+        log = engine.run()
 
         if mapper is not None:
             self.scheduler.drain()      # serve every remaining submission
-        act = [cl for cl in self.clients if cl.active]
+        sq = log.queried * (log.mode_sq == 1)
+        lq = log.queried * (log.mode_sq == 0)
+        for cl in self.clients:
+            cl.active = bool(log.client_active[-1, cl.cid])
+            cl.queries = int(sq[:, cl.cid].sum())
+            cl.lq_ticks = int(lq[:, cl.cid].sum())
         self.stats = {
             "n_ticks": n_ticks,
             "n_clients": self.n_clients,
-            "active_at_end": len(act),
-            "tick_ms_mean": float(np.mean(tick_lat)) if tick_lat else 0.0,
-            "down_bytes_total": down_total,
-            "down_bytes_per_client": down_total / max(self.n_clients, 1),
-            "delivered_packets": sum(c.session.delivered
-                                     for c in self.clients),
-            "delayed_packets": sum(c.session.delayed for c in self.clients),
-            "sq_queries": sum(c.queries for c in self.clients),
-            "lq_fallbacks": sum(c.lq_ticks for c in self.clients),
+            "active_at_end": int(log.client_active[-1].sum()),
+            "tick_ms_mean": float(np.mean(engine.wall_ms))
+            if engine.wall_ms else 0.0,
+            "down_bytes_total": int(log.sent_bytes.sum()),
+            "down_bytes_per_client": int(log.sent_bytes.sum())
+            / max(self.n_clients, 1),
+            "delivered_packets": int(log.delivered.sum()),
+            "delayed_packets": int(log.delayed.sum()),
+            "sq_queries": int(sq.sum()),
+            "lq_fallbacks": int(lq.sum()),
             "hedges": self.scheduler.hedge_count - hedges0,
             "served": len(self.scheduler.done),
             "unserved": len(self.scheduler.waiting),

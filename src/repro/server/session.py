@@ -34,8 +34,8 @@ import jax.numpy as jnp
 from repro.core import geometry as geo
 from repro.core.knobs import Knobs
 from repro.core.local_map import UpdateBatch, compute_priority
-from repro.core.store import ObjectStore
-from repro.core.updates import _HEADER_B, UpdatePacket
+from repro.core.store import ObjectStore, deleted_mask
+from repro.core.updates import _HEADER_B, TOMBSTONE_NBYTES, UpdatePacket
 
 
 class FleetSync(NamedTuple):
@@ -53,6 +53,7 @@ class FleetBatch(NamedTuple):
     centroid: jax.Array   # [C, U, 3] f32
     version: jax.Array    # [C, U] int32
     valid: jax.Array      # [C, U] bool — live-row prefix mask per client
+    deleted: jax.Array = None   # [C, U] bool — tombstone rows
 
 
 def _downsample_gather(points: jax.Array, n_points: jax.Array,
@@ -82,35 +83,50 @@ def _collect_fleet(store: ObjectStore, synced: jax.Array, mask_c: jax.Array,
 
     Returns (FleetBatch, new_synced [C, N], nbytes [C], counts [C]).
     """
-    changed = (store.active[None]
-               & (store.obs_count[None] >= min_obs[:, None])
-               & (store.version[None] > synced)
-               & mask_c[:, None])
+    dele = deleted_mask(store)
+    live = (store.active[None]
+            & (store.obs_count[None] >= min_obs[:, None])
+            & (store.version[None] > synced))
+    # a tombstone ships to exactly the clients whose sync vector ever
+    # covered the object; clients that never held it delete nothing
+    tomb = (dele[None] & (synced > 0)
+            & (store.version[None] > synced))
+    changed = (live | tomb) & mask_c[:, None]
     pri = jax.vmap(lambda up: compute_priority(
         store.embed, store.label, store.centroid, user_pos=up, knobs=knobs,
         interest_embeds=interest_embeds))(user_pos)          # [C, N]
+    # deletions jump the queue: a freed client slot outranks a refresh
+    pri = jnp.where(tomb, jnp.float32(1e30), pri)
     score = jnp.where(changed, pri, -jnp.inf)
     top, idx = jax.lax.top_k(score, budget)                  # [C, U]
     valid = jnp.isfinite(top)
+    row_del = jnp.take_along_axis(tomb, idx, axis=1) & valid  # [C, U]
 
     pts, n = _downsample_gather(store.points, store.n_points, idx,
                                 points_budget)
+    n = jnp.where(row_del, 0, n)
+    pts = jnp.where(row_del[..., None, None], 0.0, pts)
     cent = jax.vmap(jax.vmap(lambda p, m: geo.centroid_bbox(p, m)[0]))(pts, n)
+    cent = jnp.where(row_del[..., None], store.centroid[idx], cent)
     batch = FleetBatch(
         oid=store.ids[idx], embed=store.embed[idx], label=store.label[idx],
         points=pts.astype(jnp.float16), n_points=n, centroid=cent,
-        version=store.version[idx], valid=valid)
+        version=store.version[idx], valid=valid, deleted=row_del)
 
     N = synced.shape[1]
     shipped = jnp.where(valid, idx, N)                       # OOB -> dropped
     new_synced = jax.vmap(
         lambda s, i, w: s.at[i].set(w, mode="drop"))(
             synced, shipped, store.version[idx])
+    # fully-empty slots must not pin a stale synced version on any client
+    new_synced = jnp.where((store.active | dele)[None], new_synced, 0)
 
     E = store.embed.shape[1]
     n_live = jnp.where(valid, n, 0)
     counts = valid.sum(axis=-1).astype(jnp.int32)
-    nbytes = counts * (_HEADER_B + 2 * E) + 6 * n_live.sum(axis=-1)
+    n_tomb = row_del.sum(axis=-1).astype(jnp.int32)
+    nbytes = ((counts - n_tomb) * (_HEADER_B + 2 * E)
+              + 6 * n_live.sum(axis=-1) + n_tomb * TOMBSTONE_NBYTES)
     return batch, new_synced, nbytes, counts
 
 
@@ -126,6 +142,13 @@ class FleetPacket:
     def total_nbytes(self) -> int:
         return int(self.nbytes.sum())
 
+    def tomb_counts(self) -> np.ndarray:
+        """[C] tombstone rows actually shipped per client this tick."""
+        if self.batch is None or self.batch.deleted is None:
+            return np.zeros_like(self.counts)
+        return (np.asarray(self.batch.deleted)
+                & np.asarray(self.batch.valid)).sum(axis=1)
+
     def packet_for(self, c: int) -> UpdatePacket:
         """Single-client UpdatePacket view (leading-dim slice, no copy on
         the live path — `DeviceClient.ingest` consumes the batch as-is)."""
@@ -136,7 +159,8 @@ class FleetPacket:
         ub = UpdateBatch(oid=b.oid[c], embed=b.embed[c], label=b.label[c],
                          points=b.points[c], n_points=b.n_points[c],
                          centroid=b.centroid[c], version=b.version[c],
-                         valid=b.valid[c])
+                         valid=b.valid[c],
+                         deleted=None if b.deleted is None else b.deleted[c])
         return UpdatePacket(batch=ub, count=cnt, nbytes=int(self.nbytes[c]),
                             tick=self.tick)
 

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.knobs import Knobs
-from repro.core.store import ObjectStore, init_store
+from repro.core.store import ObjectStore, deleted_mask, init_store
 from repro.core.updates import _bucket
 
 
@@ -102,8 +102,13 @@ def _zone_scatter(zone: ObjectStore, src: ObjectStore, g_idx: jax.Array,
     def put(zf, sf):
         return zf.at[tgt].set(sf[g_idx], mode="drop")
 
+    # copied rows take the SOURCE row's live/tombstone state (a global
+    # tombstone mirrors as a shard tombstone so the deletion propagates
+    # through the per-zone sync sessions); freed slots clear both
     active = zone.active.at[dt].set(False, mode="drop") \
-                        .at[tgt].set(True, mode="drop")
+                        .at[tgt].set(src.active[g_idx], mode="drop")
+    deleted = deleted_mask(zone).at[dt].set(False, mode="drop") \
+        .at[tgt].set(deleted_mask(src)[g_idx], mode="drop")
     return ObjectStore(
         ids=put(zone.ids, src.ids), active=active,
         embed=put(zone.embed, src.embed), label=put(zone.label, src.label),
@@ -115,7 +120,7 @@ def _zone_scatter(zone: ObjectStore, src: ObjectStore, g_idx: jax.Array,
         obs_count=put(zone.obs_count, src.obs_count),
         version=put(zone.version, src.version),
         last_seen=put(zone.last_seen, src.last_seen),
-        next_id=zone.next_id)
+        next_id=zone.next_id, deleted=deleted)
 
 
 def _pad_idx(vals: list, bucket: int):
@@ -154,7 +159,7 @@ class ZoneShardedStore:
         # pre-populated zones keeps their occupied slots occupied
         self._slot, self._ver, self._free = [], [], []
         for zone in self.zones:
-            act = np.asarray(zone.active)
+            act = np.asarray(zone.active) | np.asarray(deleted_mask(zone))
             ids = np.asarray(zone.ids)
             ver = np.asarray(zone.version)
             occ = np.nonzero(act)[0]
@@ -178,7 +183,11 @@ class ZoneShardedStore:
         version = np.asarray(store.version)
         ids = np.asarray(store.ids)
         cent = np.asarray(store.centroid)
-        gidx = np.nonzero(active)[0]
+        # tombstones mirror like live rows (routed by their retained
+        # centroid): the shard must hold the version-bumped deletion until
+        # every subscriber has shipped it; once the global store retires
+        # the slot the row vanishes from `now` and the shard slot is freed
+        gidx = np.nonzero(active | np.asarray(deleted_mask(store)))[0]
         Z = self.grid.n_zones
         now = [dict() for _ in range(Z)]
         if len(gidx):

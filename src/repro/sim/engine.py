@@ -1,0 +1,450 @@
+"""The discrete-event session loop: one engine for every scenario.
+
+Subsumes the two ad-hoc drivers (examples/network_drop_session.py and
+server.fleet.FleetSimulator are thin wrappers): per tick it applies the
+scenario's knob + object events to the world (or steps a mapping frontend
+over rendered frames), mirrors the store into the zone-sharded fleet
+server, advances client churn/poses, runs ONE vmapped fleet collect,
+delivers packets through the outage-aware ``ClientSession`` step, executes
+the seeded query plan (SQ/LQ mode switching on observed latency), and logs
+everything into a structured ``MetricsLog``.
+
+Determinism is the contract: the loop touches no wall clock and draws no
+unseeded randomness, so the same Scenario replays to a bit-identical
+MetricsLog — the golden-replay test (tests/test_scenario_engine.py) and the
+committed metrics snapshot catch silent protocol drift.  Latency and power
+are MODELs (NetworkModel transfer times, PowerModel coefficients — see
+EXPERIMENTS.md), never measurements.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.local_map import local_map_nbytes
+from repro.core.query import Query
+from repro.core.runtime import (ClientSession, DeviceClient, NetworkModel,
+                                PowerModel)
+from repro.server.fleet import FleetServer
+from repro.server.zones import ZoneGrid
+from repro.sim.scenario import Scenario
+from repro.sim.world import WorldState
+
+# modeled on-device query cost (ms): the measured fused local-query
+# dispatch at paper shapes (BENCH_query_engine.json full_mix) — a MODEL
+# constant so replays are deterministic
+LQ_MODEL_MS = 3.5
+# SQ wire model: fp16 query embedding up, k result rows (id+score+slot) down
+_SQ_ROW_B = 16
+
+
+@dataclass
+class MetricsLog:
+    """Per-tick structured metrics, all [T] or [T, C] numpy arrays.
+
+    Every field is reproducible bit-for-bit from the Scenario alone —
+    ``equals`` is exact array equality (NaN-aware), which is what the
+    golden-replay test asserts.  ``summary`` splits exact counters/byte
+    totals from MODELed float metrics so a committed snapshot can hold the
+    former to the digit and the latter to a tolerance.
+    """
+    tick: np.ndarray            # [T] int32
+    events: np.ndarray          # [T, 3] int32 — spawned, moved, removed
+    gc_released: np.ndarray     # [T] int32 tombstone slots retired
+    server_live: np.ndarray     # [T] int32
+    server_tombstones: np.ndarray   # [T] int32
+    sent_bytes: np.ndarray      # [T, C] int64 — wire bytes sent this tick
+    sent_tomb_bytes: np.ndarray  # [T, C] int64 — the tombstone-row share
+    #                              of sent_bytes (measured, not estimated)
+    recv_bytes: np.ndarray      # [T, C] int64 — bytes ingested this tick
+    delivered: np.ndarray       # [T, C] int32 — packets ingested this tick
+    delayed: np.ndarray         # [T, C] int32 — packets delayed this tick
+    client_active: np.ndarray   # [T, C] bool — joined and not left
+    client_live: np.ndarray     # [T, C] int32 — local-map live objects
+    client_nbytes: np.ndarray   # [T, C] int64 — local-map bytes (fixed cap)
+    mode_sq: np.ndarray         # [T, C] int8 — 1 SQ, 0 LQ, -1 inactive
+    queried: np.ndarray         # [T, C] int8 — 1 if a query ran this tick
+    query_hit: np.ndarray       # [T, C] int8 — top-1 label correct
+    #                             (1/0, -1 = no query or no ground truth)
+    query_ms: np.ndarray        # [T, C] f64 MODELed latency (NaN = none)
+    power_w: np.ndarray         # [T, C] f64 MODELed device power
+
+    _FIELDS = ("tick", "events", "gc_released", "server_live",
+               "server_tombstones", "sent_bytes", "sent_tomb_bytes",
+               "recv_bytes", "delivered", "delayed", "client_active",
+               "client_live", "client_nbytes", "mode_sq", "queried",
+               "query_hit", "query_ms", "power_w")
+
+    @property
+    def n_ticks(self) -> int:
+        return len(self.tick)
+
+    @property
+    def n_clients(self) -> int:
+        return self.sent_bytes.shape[1]
+
+    def equals(self, other: "MetricsLog") -> bool:
+        """Bit-exact equality (the golden-replay invariant)."""
+        return all(np.array_equal(getattr(self, f), getattr(other, f),
+                                  equal_nan=True) for f in self._FIELDS)
+
+    def diff(self, other: "MetricsLog") -> list:
+        return [f for f in self._FIELDS
+                if not np.array_equal(getattr(self, f), getattr(other, f),
+                                      equal_nan=True)]
+
+    # ------------------------------------------------------------------
+    def summary(self) -> dict:
+        """JSON-able snapshot: ``exact`` (counts + byte totals, compared to
+        the digit) and ``approx`` (MODELed latency/power, compared within
+        tolerance)."""
+        sq = self.queried * (self.mode_sq == 1)
+        lq = self.queried * (self.mode_sq == 0)
+        q_ms = self.query_ms[~np.isnan(self.query_ms)]
+        exact = {
+            "n_ticks": int(self.n_ticks),
+            "n_clients": int(self.n_clients),
+            "spawned": int(self.events[:, 0].sum()),
+            "moved": int(self.events[:, 1].sum()),
+            "removed": int(self.events[:, 2].sum()),
+            "gc_released": int(self.gc_released.sum()),
+            "server_live_final": int(self.server_live[-1]),
+            "server_tombstones_final": int(self.server_tombstones[-1]),
+            "sent_bytes_total": int(self.sent_bytes.sum()),
+            "sent_bytes_per_client": [int(x) for x in
+                                      self.sent_bytes.sum(axis=0)],
+            "tombstone_bytes_total": int(self.sent_tomb_bytes.sum()),
+            "recv_bytes_total": int(self.recv_bytes.sum()),
+            "delivered_total": int(self.delivered.sum()),
+            "delayed_total": int(self.delayed.sum()),
+            "client_live_final": [int(x) for x in self.client_live[-1]],
+            "sq_queries": int(sq.sum()),
+            "lq_queries": int(lq.sum()),
+            "query_hits": int((self.query_hit == 1).sum()),
+            "idle_zero_byte_ticks": int((self.sent_bytes.sum(axis=1)
+                                         == 0).sum()),
+        }
+        approx = {
+            "query_ms_mean": float(q_ms.mean()) if len(q_ms) else 0.0,
+            "query_ms_max": float(q_ms.max()) if len(q_ms) else 0.0,
+            "power_w_mean": float(self.power_w.mean()),
+        }
+        return {"exact": exact, "approx": approx}
+
+    def assert_matches_snapshot(self, snapshot: dict,
+                                rel_tol: float = 0.25) -> None:
+        """Compare against a committed ``summary()`` dict: exact fields to
+        the digit, approx fields within ``rel_tol`` relative tolerance."""
+        got = self.summary()
+        for k, want in snapshot["exact"].items():
+            assert got["exact"][k] == want, \
+                f"snapshot drift: {k}: got {got['exact'][k]}, want {want}"
+        for k, want in snapshot["approx"].items():
+            g = got["approx"][k]
+            assert abs(g - want) <= rel_tol * max(abs(want), 1e-9), \
+                f"snapshot drift: {k}: got {g}, want {want} ±{rel_tol:.0%}"
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class ScenarioEngine:
+    """Run a Scenario through the full device-cloud loop.
+
+    ``mapper``/``frames``/``classes`` switch the map source from the
+    event-driven WorldState to a real mapping frontend (only 'remove'
+    events apply then — they tombstone the mapper's store directly).
+    ``query_hook(cid, t, spec)`` externalizes SQ execution (the
+    FleetSimulator routes through serving.BatchScheduler); ``tick_hook(t)``
+    runs after every tick (scheduler pumping).
+    """
+    scenario: Scenario
+    mapper: object = None
+    frames: list = None
+    classes: dict = None
+    embedder: object = None            # query-side embeddings (mapper path)
+    query_hook: object = None
+    tick_hook: object = None
+    power: PowerModel = field(default_factory=PowerModel)
+    # built state (exposed for wrappers/tests)
+    server: FleetServer = None
+    world: WorldState = None
+    sessions: dict = None              # cid -> ClientSession
+    joined: dict = None                # cid -> bool
+
+    def __post_init__(self):
+        sc = self.scenario
+        assert sc.knobs is not None, "Scenario.knobs must be set"
+        cids = [c.cid for c in sc.clients]
+        assert cids == list(range(len(cids))), \
+            "ClientSpec.cid must be 0..C-1 (FleetServer indexing)"
+        grid = ZoneGrid.for_room(sc.grid.room, sc.grid.nx, sc.grid.nz)
+        if self.server is None:
+            self.server = FleetServer(knobs=sc.knobs,
+                                      embed_dim=sc.embed_dim,
+                                      n_clients=len(sc.clients), grid=grid,
+                                      budget=sc.budget)
+        if self.mapper is None and self.world is None:
+            self.world = WorldState(knobs=sc.knobs, embed_dim=sc.embed_dim,
+                                    seed=sc.seed)
+        self.sessions = {
+            c.cid: ClientSession(
+                dev=DeviceClient(knobs=sc.knobs, embed_dim=sc.embed_dim),
+                net=NetworkModel(rtt_ms=c.net.rtt_ms,
+                                 bandwidth_mbps=c.net.bandwidth_mbps,
+                                 outages=c.net.outages),
+                knobs=sc.knobs, dt=sc.tick_s)
+            for c in sc.clients}
+        self.joined = {c.cid: False for c in sc.clients}
+        self._radius = {c.cid: c.subscribe_radius for c in sc.clients}
+        self._events = defaultdict(list)
+        for ev in sc.events:
+            self._events[ev.tick].append(ev)
+        self._knob_events = defaultdict(list)
+        for ev in sc.knob_events:
+            self._knob_events[ev.tick].append(ev)
+
+    # ------------------------------------------------------------------
+    def _store(self):
+        return self.mapper.store if self.mapper is not None \
+            else self.world.store
+
+    def _query_embed(self, class_id: int):
+        if self.world is not None:
+            return self.world.embedder.embed_text(class_id)
+        if self.embedder is not None:
+            return self.embedder.embed_text(class_id)
+        return None
+
+    def _live_classes(self) -> np.ndarray:
+        if self.world is not None:
+            return self.world.live_classes()
+        st = self.mapper.store
+        return np.unique(np.asarray(st.label)[np.asarray(st.active)])
+
+    def _apply_events(self, i: int) -> tuple:
+        from repro.core.store import deleted_mask, remove_objects
+        spawned = moved = removed = 0
+        for ev in self._events.get(i, ()):
+            if self.mapper is not None:
+                if ev.kind == "remove":
+                    before = int(np.asarray(
+                        deleted_mask(self.mapper.store)).sum())
+                    self.mapper.store = remove_objects(self.mapper.store,
+                                                       [ev.oid])
+                    removed += int(np.asarray(
+                        deleted_mask(self.mapper.store)).sum()) - before
+                continue
+            before = (self.world.spawned, self.world.moved,
+                      self.world.removed)
+            self.world.apply(ev, tick=i)
+            spawned += self.world.spawned - before[0]
+            moved += self.world.moved - before[1]
+            removed += self.world.removed - before[2]
+        return spawned, moved, removed
+
+    def _held_oids(self) -> set:
+        """Object ids any JOINED client still retains or has in a pending
+        (in-flight) packet — these tombstones must not be released yet: the
+        client has not applied the deletion (or might apply an in-flight
+        insert after the release and keep a ghost).  Clients that left for
+        good are excluded by design (zone-leave staleness, see ROADMAP)."""
+        held = set()
+        for cid, sess in self.sessions.items():
+            if not self.joined[cid]:
+                continue
+            m = sess.dev.local
+            held.update(int(x) for x in
+                        np.asarray(m.ids)[np.asarray(m.active)])
+            for _, pkt in sess.pending:
+                if pkt.count and pkt.batch is not None:
+                    held.update(int(x) for x in
+                                np.asarray(pkt.batch.oid)[:pkt.count])
+        return held
+
+    def _apply_knob_events(self, i: int) -> None:
+        for ev in self._knob_events.get(i, ()):
+            targets = [ev.cid] if ev.cid is not None \
+                else [c.cid for c in self.scenario.clients]
+            for cid in targets:
+                if ev.min_obs is not None:
+                    for s in self.server.sessions:
+                        s.set_client(cid, min_obs=ev.min_obs)
+                if ev.subscribe_radius is not None:
+                    self._radius[cid] = ev.subscribe_radius
+
+    # ------------------------------------------------------------------
+    def run(self) -> MetricsLog:
+        import time as _time
+        sc = self.scenario
+        C, T = len(sc.clients), sc.total_ticks
+        key = jax.random.key(sc.seed)
+        rec = {f: [] for f in MetricsLog._FIELDS}
+        prev_down = np.zeros(C, np.int64)
+        prev_delivered = np.zeros(C, np.int32)
+        prev_delayed = np.zeros(C, np.int32)
+        self.wall_ms = []      # measured tick wall time — NOT in MetricsLog
+        #                        (wall clock would break bit-replay)
+
+        for i in range(T):
+            wall0 = _time.perf_counter()
+            t = i * sc.tick_s
+            self._apply_knob_events(i)
+            spawned, moved, removed = self._apply_events(i)
+            if self.mapper is not None and self.frames is not None \
+                    and i < len(self.frames):
+                self.mapper.process_frame(self.frames[i], self.classes,
+                                          jax.random.fold_in(key, i))
+            gc_n = 0
+            if self.world is not None and sc.tombstone_ttl is not None:
+                gc_n = self.world.gc(tick=i, ttl=sc.tombstone_ttl,
+                                     protected=self._held_oids())
+            store = self._store()
+            self.server.refresh(store)
+
+            # churn + pose advance + deliverability
+            deliverable = np.zeros(C, bool)
+            active = np.zeros(C, bool)
+            for spec in sc.clients:
+                cid, sess = spec.cid, self.sessions[spec.cid]
+                in_window = spec.join_tick <= i < spec.leave_tick
+                if not self.joined[cid] and in_window:
+                    self.joined[cid] = True
+                    self.server.join(cid, spec.track.pose_at(t),
+                                     self._radius[cid])
+                elif self.joined[cid] and not in_window:
+                    self.joined[cid] = False
+                    self.server.leave(cid)
+                if self.joined[cid]:
+                    pos = spec.track.pose_at(t)
+                    sess.user_pos = jnp.asarray(pos)
+                    self.server.set_client_pose(cid, pos, self._radius[cid])
+                    deliverable[cid] = sess.net.is_up(t)
+                    active[cid] = True
+
+            packets = self.server.tick(deliverable)
+            sent = self.server.per_client_nbytes(packets)
+            from repro.core.updates import TOMBSTONE_NBYTES
+            tomb_sent = np.zeros(C, np.int64)
+            for _, pkt in packets:
+                tomb_sent += pkt.tomb_counts().astype(np.int64) \
+                    * TOMBSTONE_NBYTES
+
+            # client step: delivery + ingest + SQ/LQ mode
+            mode = np.full(C, -1, np.int8)
+            for spec in sc.clients:
+                cid, sess = spec.cid, self.sessions[spec.cid]
+                if not active[cid]:
+                    continue
+                m = None
+                for _, pkt in packets:
+                    m = sess.step(t, pkt.packet_for(cid))
+                if m is None:
+                    m = sess.step(t)
+                mode[cid] = 1 if m == "SQ" else 0
+
+            # seeded query plan
+            queried = np.zeros(C, np.int8)
+            hit = np.full(C, -1, np.int8)
+            q_ms = np.full(C, np.nan)
+            classes = self._live_classes()
+            for spec in sc.clients:
+                cid = spec.cid
+                if not active[cid] or not len(classes):
+                    continue
+                rng = np.random.default_rng(
+                    (sc.seed, 131 * i + cid))
+                if rng.random() >= sc.query.prob:
+                    continue
+                target = int(classes[int(rng.integers(len(classes)))])
+                emb = self._query_embed(target)
+                if emb is None:
+                    continue
+                sess = self.sessions[cid]
+                queried[cid] = 1
+                E = sc.embed_dim
+                if mode[cid] == 1:       # SQ over the fleet store
+                    spec_q = Query(
+                        embed=emb,
+                        near=(jnp.asarray(spec.track.pose_at(t)),
+                              jnp.asarray(sc.query.radius, jnp.float32)),
+                        k=sc.query.k)
+                    q_ms[cid] = sess.net.transfer_ms(
+                        2 * E + sc.query.k * _SQ_ROW_B)
+                    if self.query_hook is not None:
+                        self.query_hook(cid, t, spec_q)
+                    else:
+                        res = self.server.query(spec_q)
+                        hit[cid] = self._score_hit(res, target)
+                else:                    # LQ on the device local map
+                    res = sess.dev.query_spec(Query(embed=emb,
+                                                    k=sc.query.k))
+                    q_ms[cid] = LQ_MODEL_MS
+                    hit[cid] = self._score_hit(res, target)
+
+            # MODELed device power for this tick
+            sq_qps = (queried * (mode == 1)) / sc.tick_s
+            lq_qps = (queried * (mode == 0)) / sc.tick_s
+            power = np.array([
+                self.power.average_power(streaming=bool(active[c]),
+                                         local_qps=float(lq_qps[c]),
+                                         server_qps=float(sq_qps[c]))
+                if active[c] else 0.0 for c in range(C)])
+
+            if self.tick_hook is not None:
+                self.tick_hook(t)
+
+            # record
+            st = self._store()
+            down = np.array([self.sessions[c].down_bytes for c in range(C)],
+                            np.int64)
+            dlv = np.array([self.sessions[c].delivered for c in range(C)],
+                           np.int32)
+            dly = np.array([self.sessions[c].delayed for c in range(C)],
+                           np.int32)
+            from repro.core.store import deleted_mask
+            rec["tick"].append(i)
+            rec["events"].append((spawned, moved, removed))
+            rec["gc_released"].append(gc_n)
+            rec["server_live"].append(int(np.asarray(st.active).sum()))
+            rec["server_tombstones"].append(
+                int(np.asarray(deleted_mask(st)).sum()))
+            rec["sent_bytes"].append(sent.astype(np.int64))
+            rec["sent_tomb_bytes"].append(tomb_sent)
+            rec["recv_bytes"].append(down - prev_down)
+            rec["delivered"].append(dlv - prev_delivered)
+            rec["delayed"].append(dly - prev_delayed)
+            prev_down, prev_delivered, prev_delayed = down, dlv, dly
+            rec["client_active"].append(active.copy())
+            rec["client_live"].append(np.array(
+                [int(np.asarray(self.sessions[c].dev.local.active).sum())
+                 for c in range(C)], np.int32))
+            rec["client_nbytes"].append(np.array(
+                [local_map_nbytes(self.sessions[c].dev.local)
+                 for c in range(C)], np.int64))
+            rec["mode_sq"].append(mode.copy())
+            rec["queried"].append(queried.copy())
+            rec["query_hit"].append(hit.copy())
+            rec["query_ms"].append(q_ms.copy())
+            rec["power_w"].append(power)
+            self.wall_ms.append((_time.perf_counter() - wall0) * 1e3)
+
+        return MetricsLog(**{f: np.asarray(v) for f, v in rec.items()})
+
+    # ------------------------------------------------------------------
+    def _score_hit(self, res, target_cls: int) -> int:
+        """Top-1 retrieval correctness against world ground truth."""
+        if self.world is None:
+            return -1
+        oid = int(np.asarray(res.oids).ravel()[0])
+        if oid == 0:
+            return 0
+        return int(self.world.labels.get(oid) == target_cls)
+
+
+def run_scenario(scenario: Scenario, **kw) -> MetricsLog:
+    """One-call convenience: build the engine and run it."""
+    return ScenarioEngine(scenario, **kw).run()

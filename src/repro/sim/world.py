@@ -1,0 +1,145 @@
+"""Event-driven server map: applies ObjectEvents straight onto an
+ObjectStore, bypassing the rendering/mapping frontend.
+
+The scenario engine's focus is the update/query/network loop, so the world
+is authoritative and exact: spawns write fully-observed objects (class-basis
+embedding, primitive point cloud, obs_count past the transient filter),
+moves translate geometry with a version bump, removes tombstone through
+``store.remove_objects`` — the same protocol path a mapping frontend's prune
+would take.  All randomness is a per-object ``default_rng(seed, oid)``
+stream, so a world replayed from the same Scenario is bit-identical.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.knobs import Knobs
+from repro.core.store import (ObjectStore, deleted_mask, release_tombstones,
+                              remove_objects, store_from_knobs)
+from repro.data.scenes import _object_cloud
+from repro.perception.embedder import OracleEmbedder
+from repro.sim.scenario import ObjectEvent
+
+
+@dataclass
+class WorldState:
+    knobs: Knobs
+    embed_dim: int
+    seed: int = 0
+    store: ObjectStore = None
+    embedder: OracleEmbedder = None
+    labels: dict = field(default_factory=dict)       # oid -> class_id
+    removed_at: dict = field(default_factory=dict)   # oid -> removal tick
+    spawned: int = 0
+    moved: int = 0
+    removed: int = 0
+
+    def __post_init__(self):
+        if self.store is None:
+            self.store = store_from_knobs(self.knobs, self.embed_dim)
+        if self.embedder is None:
+            # noiseless oracle: the world's embeddings ARE the class basis,
+            # so query ground truth is exact and replay is deterministic
+            self.embedder = OracleEmbedder(embed_dim=self.embed_dim,
+                                           noise=0.0)
+
+    # ------------------------------------------------------------------
+    def _slot_of(self, oid: int) -> int | None:
+        ids = np.asarray(self.store.ids)
+        act = np.asarray(self.store.active)
+        hits = np.nonzero((ids == oid) & act)[0]
+        return int(hits[0]) if len(hits) else None
+
+    def apply(self, ev: ObjectEvent, *, tick: int) -> None:
+        if ev.kind == "spawn":
+            self._spawn(ev)
+        elif ev.kind == "move":
+            self._move(ev)
+        elif ev.kind == "remove":
+            if self._slot_of(ev.oid) is not None:
+                self.store = remove_objects(self.store, [ev.oid])
+                self.removed_at[ev.oid] = tick
+                self.removed += 1
+        else:
+            raise ValueError(f"unknown event kind {ev.kind!r}")
+
+    def _spawn(self, ev: ObjectEvent) -> None:
+        st = self.store
+        occupied = np.asarray(st.active) | np.asarray(deleted_mask(st))
+        free = np.nonzero(~occupied)[0]
+        if not len(free) or self._slot_of(ev.oid) is not None:
+            return
+        s = int(free[0])
+        rng = np.random.default_rng((self.seed, ev.oid))
+        P = st.points.shape[1]
+        n = int(min(ev.n_points, P))
+        cloud = _object_cloud(rng, ev.class_id % 3, 0.5, n) \
+            + np.asarray(ev.pos, np.float32)
+        pts = np.zeros((P, 3), np.float32)
+        pts[:n] = cloud
+        emb = np.asarray(self.embedder.embed_text(ev.class_id))
+        self.labels[ev.oid] = ev.class_id
+        self.spawned += 1
+        self.store = st._replace(
+            ids=st.ids.at[s].set(ev.oid),
+            active=st.active.at[s].set(True),
+            embed=st.embed.at[s].set(jnp.asarray(emb)),
+            label=st.label.at[s].set(ev.class_id),
+            points=st.points.at[s].set(jnp.asarray(pts)),
+            n_points=st.n_points.at[s].set(n),
+            centroid=st.centroid.at[s].set(
+                jnp.asarray(cloud.mean(axis=0))),
+            bbox_min=st.bbox_min.at[s].set(jnp.asarray(cloud.min(axis=0))),
+            bbox_max=st.bbox_max.at[s].set(jnp.asarray(cloud.max(axis=0))),
+            obs_count=st.obs_count.at[s].set(
+                max(self.knobs.min_obs_before_sync, 1) + 1),
+            version=st.version.at[s].set(1),
+            next_id=jnp.maximum(st.next_id, ev.oid + 1))
+
+    def _move(self, ev: ObjectEvent) -> None:
+        s = self._slot_of(ev.oid)
+        if s is None:
+            return
+        st = self.store
+        d = jnp.asarray(ev.delta, jnp.float32)
+        P = st.points.shape[1]
+        mask = (jnp.arange(P) < st.n_points[s])[:, None]
+        self.moved += 1
+        self.store = st._replace(
+            points=st.points.at[s].set(
+                jnp.where(mask, st.points[s] + d, 0.0)),
+            centroid=st.centroid.at[s].set(st.centroid[s] + d),
+            bbox_min=st.bbox_min.at[s].set(st.bbox_min[s] + d),
+            bbox_max=st.bbox_max.at[s].set(st.bbox_max[s] + d),
+            version=st.version.at[s].add(1))
+
+    # ------------------------------------------------------------------
+    def gc(self, *, tick: int, ttl: int, protected=frozenset()) -> int:
+        """Release tombstones older than ``ttl`` ticks AND not in
+        ``protected`` (oids some client still holds or has in flight —
+        release_tombstones' precondition is that the deletion has shipped
+        everywhere; age alone is NOT sufficient: a client offline longer
+        than the TTL would otherwise keep the ghost object forever).
+        Returns how many slots were retired; the zone mirror / sync layers
+        observe the retirement on the next refresh."""
+        ids = np.asarray(self.store.ids)
+        dele = np.asarray(deleted_mask(self.store))
+        slots = [s for s in np.nonzero(dele)[0]
+                 if tick - self.removed_at.get(int(ids[s]), tick) >= ttl
+                 and int(ids[s]) not in protected]
+        if slots:
+            self.store = release_tombstones(self.store, slots)
+        return len(slots)
+
+    # ------------------------------------------------------------------
+    def live_ids(self) -> set:
+        st = self.store
+        return set(int(i) for i in
+                   np.asarray(st.ids)[np.asarray(st.active)])
+
+    def live_classes(self) -> np.ndarray:
+        st = self.store
+        return np.unique(np.asarray(st.label)[np.asarray(st.active)])

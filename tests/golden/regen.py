@@ -1,0 +1,31 @@
+"""Regenerate the committed golden metrics snapshot — run ONLY when a
+protocol change intentionally shifts the numbers, and say so in the PR.
+
+    PYTHONPATH=src python tests/golden/regen.py
+"""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[2] / "src"))
+
+from repro.sim import churn_scenario, run_scenario  # noqa: E402
+
+GOLDEN = Path(__file__).parent / "scenario_churn_v1.json"
+SPEC = dict(seed=23, n_objects=20, n_ticks=20, n_clients=3,
+            remove_frac=0.25, drain_ticks=8)
+
+
+def scenario():
+    return churn_scenario(**SPEC)
+
+
+if __name__ == "__main__":
+    s = run_scenario(scenario()).summary()
+    s["_comment"] = (
+        f"Golden metrics snapshot for churn_scenario(**{SPEC}). 'exact' "
+        "fields are compared to the digit; 'approx' (MODELed latency/"
+        "power) within tolerance. Regenerate ONLY for an intentional "
+        "protocol change: PYTHONPATH=src python tests/golden/regen.py")
+    GOLDEN.write_text(json.dumps(s, indent=1) + "\n")
+    print(f"wrote {GOLDEN}")

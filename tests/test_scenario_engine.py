@@ -1,0 +1,195 @@
+"""Dynamic-scene scenario engine: golden replay (bit-identical MetricsLogs
++ committed snapshot) and the churn acceptance scenario — every client
+converges to the server's live set after packets drain, removal ticks ship
+tombstone-sized packets, idle ticks ship zero bytes."""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.knobs import Knobs
+from repro.core.updates import TOMBSTONE_NBYTES
+from repro.sim import (ClientSpec, NetTrace, ObjectEvent, PoseTrack,
+                       QueryPlan, Scenario, churn_scenario, run_scenario)
+from repro.sim.scenario import GridSpec
+
+GOLDEN = Path(__file__).parent / "golden" / "scenario_churn_v1.json"
+
+KN = Knobs(server_capacity=64, client_capacity=32,
+           max_object_points_server=32, max_object_points_client=8,
+           min_obs_before_sync=1)
+
+
+def _client_ids(session):
+    m = session.dev.local
+    return set(np.asarray(m.ids)[np.asarray(m.active)].tolist())
+
+
+def _golden_scenario():
+    # MUST match tests/golden/regen.py (the committed snapshot's workload)
+    return churn_scenario(seed=23, n_objects=20, n_ticks=20, n_clients=3,
+                          remove_frac=0.25, drain_ticks=8)
+
+
+# ---------------------------------------------------------------------------
+def test_golden_replay_bit_identical():
+    """Acceptance: a fixed-seed churn scenario (>=20% of objects removed
+    mid-run) replayed twice produces bit-identical MetricsLogs."""
+    sc = _golden_scenario()
+    n_spawned = sum(1 for e in sc.events if e.kind == "spawn")
+    n_removed = sum(1 for e in sc.events if e.kind == "remove")
+    assert n_removed / n_spawned >= 0.20
+    log1 = run_scenario(sc)
+    log2 = run_scenario(sc)
+    assert log1.equals(log2), f"drift in fields: {log1.diff(log2)}"
+
+
+def test_golden_snapshot():
+    """The committed metrics snapshot catches silent protocol drift:
+    counts and byte totals to the digit, MODELed latencies in tolerance."""
+    snap = json.loads(GOLDEN.read_text())
+    log = run_scenario(_golden_scenario())
+    log.assert_matches_snapshot(snap)
+
+
+def test_churn_convergence_and_byte_scaling():
+    """Acceptance: after packets drain, every client holds exactly the
+    server's live object set; removal ticks ship tombstone-sized packets;
+    idle ticks ship 0 bytes."""
+    from repro.sim.engine import ScenarioEngine
+    sc = _golden_scenario()
+    eng = ScenarioEngine(sc)
+    log = eng.run()
+
+    # 1. convergence: every client == the server's live set, tombstones out
+    srv = eng.world.live_ids()
+    assert len(srv) == int(log.server_live[-1])
+    for cid in range(len(sc.clients)):
+        assert _client_ids(eng.sessions[cid]) == srv, f"client {cid}"
+    removed_oids = {e.oid for e in sc.events if e.kind == "remove"}
+    for cid in range(len(sc.clients)):
+        assert not (_client_ids(eng.sessions[cid]) & removed_oids)
+
+    # 2. the drain tail is quiescent: zero bytes once everything shipped
+    assert (log.sent_bytes[-3:] == 0).all()
+    assert log.n_ticks - int((log.sent_bytes.sum(axis=1) > 0).sum()) \
+        == log.summary()["exact"]["idle_zero_byte_ticks"]
+
+    # 3. downstream tracks churn: every nonzero tick has an event (or a
+    # packet in flight from one) within the catch-up window
+    event_ticks = {e.tick for e in sc.events} | {0}
+    busy = np.nonzero(log.sent_bytes.sum(axis=1))[0]
+    for t in busy:
+        assert any(t - 6 <= et <= t for et in event_ticks), t
+
+
+def test_removal_only_tick_ships_exactly_tombstone_bytes():
+    """A tick whose only change is K removals ships exactly
+    K * TOMBSTONE_NBYTES to every synced client."""
+    events = [ObjectEvent(tick=0, kind="spawn", oid=i, class_id=i % 4,
+                          pos=(0.5 * i - 2.0, 1.0, 0.0), n_points=16)
+              for i in range(1, 9)]
+    events += [ObjectEvent(tick=6, kind="remove", oid=2),
+               ObjectEvent(tick=6, kind="remove", oid=5)]
+    sc = Scenario(
+        seed=3, n_ticks=10, embed_dim=32, knobs=KN,
+        grid=GridSpec(room=8.0, nx=1, nz=1), budget=16,
+        clients=tuple(ClientSpec(cid=c, net=NetTrace(),
+                                 track=PoseTrack(anchor=(0.0, 1.5, 0.0)),
+                                 subscribe_radius=8.0) for c in range(2)),
+        events=tuple(events), query=QueryPlan(prob=0.0), drain_ticks=2)
+    log = run_scenario(sc)
+    assert (log.sent_bytes[6] == 2 * TOMBSTONE_NBYTES).all()
+    # ticks with no events after full sync: exactly zero
+    assert (log.sent_bytes[3:6] == 0).all()
+    assert (log.sent_bytes[7:] == 0).all()
+    assert (log.client_live[-1] == 6).all()
+
+
+def test_late_joiner_never_sees_removed_objects():
+    """A client joining after the removal syncs the post-removal map and
+    receives no tombstone bytes for objects it never held."""
+    events = [ObjectEvent(tick=0, kind="spawn", oid=i, class_id=0,
+                          pos=(float(i) - 3.0, 1.0, 0.0), n_points=8)
+              for i in range(1, 7)]
+    events += [ObjectEvent(tick=3, kind="remove", oid=1),
+               ObjectEvent(tick=3, kind="remove", oid=2)]
+    sc = Scenario(
+        seed=4, n_ticks=10, embed_dim=32, knobs=KN,
+        grid=GridSpec(room=8.0, nx=1, nz=1), budget=16,
+        clients=(ClientSpec(cid=0, subscribe_radius=8.0),
+                 ClientSpec(cid=1, subscribe_radius=8.0, join_tick=6)),
+        events=tuple(events), query=QueryPlan(prob=0.0), drain_ticks=2)
+    from repro.sim.engine import ScenarioEngine
+    eng = ScenarioEngine(sc)
+    log = eng.run()
+    assert _client_ids(eng.sessions[0]) == {3, 4, 5, 6}
+    assert _client_ids(eng.sessions[1]) == {3, 4, 5, 6}
+    # the late joiner's catch-up is live rows only — no tombstones
+    E = sc.embed_dim
+    assert int(log.sent_bytes[6, 1]) == \
+        4 * (24 + 2 * E) + 6 * 4 * 8        # 4 live rows, 8 points each
+
+
+def test_tombstone_convergence_across_outage():
+    """A removal during a client's outage still converges: the tombstone
+    coalesces into the reconnect catch-up."""
+    events = [ObjectEvent(tick=0, kind="spawn", oid=i, class_id=0,
+                          pos=(float(i) - 2.0, 1.0, 0.0), n_points=8)
+              for i in range(1, 5)]
+    events += [ObjectEvent(tick=4, kind="remove", oid=3)]
+    sc = Scenario(
+        seed=5, n_ticks=10, embed_dim=32, knobs=KN,
+        grid=GridSpec(room=8.0, nx=1, nz=1), budget=16,
+        clients=(ClientSpec(cid=0, subscribe_radius=8.0,
+                            net=NetTrace(outages=((3.0, 7.0),))),),
+        events=tuple(events), query=QueryPlan(prob=0.0), drain_ticks=2)
+    from repro.sim.engine import ScenarioEngine
+    eng = ScenarioEngine(sc)
+    log = eng.run()
+    assert (log.sent_bytes[3:7, 0] == 0).all()     # nothing during outage
+    assert _client_ids(eng.sessions[0]) == {1, 2, 4}
+    # the reconnect tick carried the tombstone (9 B) — not a re-ship of 3
+    assert int(log.sent_bytes[7, 0]) == TOMBSTONE_NBYTES
+
+
+def test_knob_schedule_and_gc():
+    """Knob events apply mid-run; tombstone_ttl retires slots and frees
+    them for reuse (gc_released > 0, spawn after GC lands on a freed
+    slot and reaches clients)."""
+    from repro.sim.scenario import KnobEvent
+    kn = Knobs(server_capacity=6, client_capacity=16,
+               max_object_points_server=16, max_object_points_client=8,
+               min_obs_before_sync=1)
+    events = [ObjectEvent(tick=0, kind="spawn", oid=i, class_id=0,
+                          pos=(float(i), 1.0, 0.0), n_points=8)
+              for i in range(1, 7)]                    # store FULL (cap 6)
+    events += [ObjectEvent(tick=2, kind="remove", oid=1),
+               ObjectEvent(tick=5, kind="spawn", oid=99, class_id=1,
+                           pos=(0.0, 1.0, 1.0), n_points=8)]
+    sc = Scenario(
+        seed=6, n_ticks=12, embed_dim=32, knobs=kn,
+        grid=GridSpec(room=8.0, nx=1, nz=1), budget=16,
+        clients=(ClientSpec(cid=0, subscribe_radius=8.0),),
+        events=tuple(events),
+        knob_events=(KnobEvent(tick=1, min_obs=1),),
+        query=QueryPlan(prob=0.0), drain_ticks=2, tombstone_ttl=2)
+    from repro.sim.engine import ScenarioEngine
+    eng = ScenarioEngine(sc)
+    log = eng.run()
+    assert int(log.gc_released.sum()) == 1
+    # oid 99 could only spawn on the GC-freed slot — and it converged
+    assert _client_ids(eng.sessions[0]) == {2, 3, 4, 5, 6, 99}
+
+
+@pytest.mark.slow
+def test_bench_scenario_suite_smoke():
+    """tier-1-adjacent smoke of the scenario benchmark suite."""
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks import scenario_suite
+    res = scenario_suite.run(smoke=True)
+    assert res["replay_bit_identical"] is True
+    assert res["converged"] is True
+    assert res["sent_bytes_total"] > 0

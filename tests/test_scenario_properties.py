@@ -1,0 +1,119 @@
+"""Property suite (hypothesis) over random dynamic-scene event streams:
+bounded client memory, tombstone convergence (including across outages and
+bogus/duplicate removals), and downstream bytes that scale with churn —
+never with scene size."""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; property tests skipped")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.knobs import Knobs
+from repro.core.local_map import init_local_map, local_map_nbytes
+from repro.core.updates import TOMBSTONE_NBYTES, update_nbytes
+from repro.sim import (ClientSpec, NetTrace, ObjectEvent, PoseTrack,
+                       QueryPlan, Scenario)
+from repro.sim.engine import ScenarioEngine
+from repro.sim.scenario import GridSpec
+
+E = 32
+# fixed capacities across examples: every draw reuses the same jit cache
+KN = Knobs(server_capacity=32, client_capacity=16,
+           max_object_points_server=16, max_object_points_client=8,
+           min_obs_before_sync=1)
+N_TICKS = 8
+DRAIN = 5
+
+
+@st.composite
+def scenarios(draw):
+    """Random but replayable dynamic scenes: spawns early, moves/removes
+    mid-run (duplicates and unknown-oid removes included), 1-2 clients of
+    which one may suffer an outage."""
+    n_obj = draw(st.integers(3, 8))
+    events = []
+    for oid in range(1, n_obj + 1):
+        events.append(ObjectEvent(
+            tick=draw(st.integers(0, 2)), kind="spawn", oid=oid,
+            class_id=draw(st.integers(0, 4)),
+            pos=(draw(st.floats(-3, 3)), 1.0, draw(st.floats(-3, 3))),
+            n_points=draw(st.integers(4, 16))))
+    removed = draw(st.lists(st.integers(1, n_obj), max_size=n_obj,
+                            unique=True))
+    for oid in removed:
+        events.append(ObjectEvent(tick=draw(st.integers(3, N_TICKS - 1)),
+                                  kind="remove", oid=oid))
+    if draw(st.booleans()) and removed:        # duplicate remove: no-op
+        events.append(ObjectEvent(tick=N_TICKS - 1, kind="remove",
+                                  oid=removed[0]))
+    if draw(st.booleans()):                    # unknown-oid remove: no-op
+        events.append(ObjectEvent(tick=draw(st.integers(0, N_TICKS - 1)),
+                                  kind="remove", oid=999))
+    for oid in draw(st.lists(st.integers(1, n_obj), max_size=3,
+                             unique=True)):    # moves (maybe of removed)
+        events.append(ObjectEvent(tick=draw(st.integers(1, N_TICKS - 1)),
+                                  kind="move", oid=oid,
+                                  delta=(draw(st.floats(-1, 1)), 0.0,
+                                         draw(st.floats(-1, 1)))))
+    events.sort(key=lambda e: (e.tick, e.kind, e.oid))
+
+    n_clients = draw(st.integers(1, 2))
+    clients = []
+    for c in range(n_clients):
+        outages = ()
+        if draw(st.booleans()):
+            a = draw(st.integers(1, N_TICKS - 2))
+            outages = ((float(a), float(a + draw(st.integers(1, 3)))),)
+        clients.append(ClientSpec(
+            cid=c, net=NetTrace(outages=outages),
+            track=PoseTrack(anchor=(0.0, 1.5, 0.0)),
+            join_tick=draw(st.integers(0, 2)), subscribe_radius=10.0))
+    return Scenario(seed=draw(st.integers(0, 2**16)), n_ticks=N_TICKS,
+                    embed_dim=E, knobs=KN,
+                    grid=GridSpec(room=8.0, nx=1, nz=1), budget=16,
+                    clients=tuple(clients), events=tuple(events),
+                    query=QueryPlan(prob=0.3), drain_ticks=DRAIN)
+
+
+@settings(max_examples=12, deadline=None)
+@given(scenarios())
+def test_dynamic_scene_invariants(sc):
+    eng = ScenarioEngine(sc)
+    log = eng.run()
+    C = len(sc.clients)
+    cap_bytes = local_map_nbytes(init_local_map(KN, E))
+
+    # --- bounded device memory: never exceeds the fixed capacity/bytes
+    assert (log.client_live <= KN.client_capacity).all()
+    assert (log.client_nbytes == cap_bytes).all()
+
+    # --- tombstone convergence after packets drain (outages all end
+    # before the drain tail): server live set == every client's set, and
+    # removed objects are absent everywhere
+    srv_live = eng.world.live_ids()
+    removed = {e.oid for e in sc.events if e.kind == "remove"}
+    for cid in range(C):
+        m = eng.sessions[cid].dev.local
+        got = set(np.asarray(m.ids)[np.asarray(m.active)].tolist())
+        assert got == srv_live, f"client {cid}: {got} != {srv_live}"
+        assert not (got & removed)
+
+    # --- quiescence: the drain tail ends with zero-byte ticks
+    assert (log.sent_bytes[-2:] == 0).all()
+
+    # --- downstream scales with churn, not scene size: per-client totals
+    # are bounded by what the events + a worst-case full catch-up per
+    # (re)join could possibly ship, with every row at its byte ceiling
+    row_max = update_nbytes(E, KN.max_object_points_client)
+    n_spawn = sum(1 for e in sc.events if e.kind == "spawn")
+    n_move = sum(1 for e in sc.events if e.kind == "move")
+    n_remove = len(removed)
+    bound = (n_spawn + n_move) * row_max + n_remove * TOMBSTONE_NBYTES \
+        + n_spawn * row_max            # reconnect catch-up re-ships <= map
+    assert (log.sent_bytes.sum(axis=0) <= bound).all()
+
+    # --- exact replay (cheap here, and catches nondeterministic drift in
+    # corners the golden scenario never reaches)
+    log2 = ScenarioEngine(sc).run()
+    assert log.equals(log2), log.diff(log2)

@@ -1,0 +1,256 @@
+"""Map-shrinkage protocol: tombstone rows through collect -> wire -> apply,
+slot retirement, per-class packet budgets, and the O(1) outage buffer."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.knobs import Knobs
+from repro.core.local_map import apply_updates_batch, init_local_map
+from repro.core.runtime import CloudService, DeviceClient
+from repro.core.store import (deleted_mask, release_tombstones,
+                              remove_objects, synthetic_store,
+                              tombstone_slots)
+from repro.core.updates import (TOMBSTONE_NBYTES, collect_updates, init_sync,
+                                update_nbytes)
+from repro.server import FleetServer, ZoneGrid
+
+E = 32
+KN = Knobs(server_capacity=64, client_capacity=64,
+           max_object_points_server=64, max_object_points_client=16,
+           min_obs_before_sync=1)
+
+
+def _synced_client(store, kn=KN):
+    sync = init_sync(kn.server_capacity)
+    dev = DeviceClient(knobs=kn, embed_dim=E)
+    pkt, sync = collect_updates(store, sync, kn, tick=0)
+    dev.ingest(pkt, user_pos=jnp.zeros(3))
+    return dev, sync
+
+
+def _client_ids(local):
+    return set(np.asarray(local.ids)[np.asarray(local.active)].tolist())
+
+
+# ---------------------------------------------------------------------------
+def test_remove_tombstones_and_client_frees_slot():
+    """remove_objects -> version-bumped tombstone -> 9-byte wire rows ->
+    device frees the slot and retires the id."""
+    store = synthetic_store(10, KN.server_capacity, E, 64, seed=0)
+    dev, sync = _synced_client(store)
+    assert _client_ids(dev.local) == set(range(1, 11))
+
+    store = remove_objects(store, [2, 5, 9])
+    assert sorted(tombstone_slots(store)) == [1, 4, 8]
+    assert not np.asarray(store.active)[[1, 4, 8]].any()
+
+    pkt, sync = collect_updates(store, sync, KN, tick=1)
+    assert pkt.count == 3
+    assert pkt.nbytes == 3 * TOMBSTONE_NBYTES      # exact wire accounting
+    assert sorted(pkt.deleted_oids) == [2, 5, 9]
+    dev.ingest(pkt, user_pos=jnp.zeros(3))
+    assert _client_ids(dev.local) == {1, 3, 4, 6, 7, 8, 10}
+    # freed slots are reusable: ids retired to 0
+    assert int((np.asarray(dev.local.ids) == 0).sum()) >= 3
+
+    # tombstone convergence: nothing more to ship
+    pkt2, sync = collect_updates(store, sync, KN, tick=2)
+    assert pkt2.nbytes == 0
+
+
+def test_tombstone_ships_only_to_clients_that_had_it():
+    """A client that never synced the object receives no tombstone bytes."""
+    store = synthetic_store(5, KN.server_capacity, E, 64, seed=1)
+    _, sync_has = _synced_client(store)
+    sync_never = init_sync(KN.server_capacity)
+
+    store = remove_objects(store, [3])
+    pkt_has, _ = collect_updates(store, sync_has, KN, tick=1)
+    assert pkt_has.count == 1 and pkt_has.nbytes == TOMBSTONE_NBYTES
+    pkt_nvr, _ = collect_updates(store, sync_never, KN, tick=1)
+    assert 3 not in {int(u.oid) for u in pkt_nvr.updates}
+    assert not pkt_nvr.deleted_oids
+
+
+def test_tombstone_slot_not_reused_until_released():
+    """associate must not insert into a tombstoned slot; after
+    release_tombstones (+ the automatic sync reset) the slot's next
+    occupant ships from scratch."""
+    from repro.core.association import Detections, associate
+
+    kn = Knobs(server_capacity=4, client_capacity=8,
+               max_object_points_server=16, max_object_points_client=8,
+               min_obs_before_sync=1)
+    store = synthetic_store(3, 4, E, 16, seed=2)
+    dev, sync = _synced_client(store, kn)
+    store = remove_objects(store, [1])
+    pkt, sync = collect_updates(store, sync, kn, tick=1)
+    dev.ingest(pkt, user_pos=jnp.zeros(3))
+
+    det = Detections(
+        embed=jnp.ones((1, E)) / np.sqrt(E), label=jnp.asarray([7]),
+        points=jnp.zeros((1, 16, 3)), n_points=jnp.asarray([4]),
+        valid=jnp.asarray([True]))
+    st2 = associate(store, det, frame=jnp.asarray(5), match_threshold=2.0,
+                    point_budget=16)
+    # the insert went to slot 3 (the only non-live, non-tombstoned slot)
+    assert int(st2.ids[3]) == int(st2.next_id) - 1
+    assert bool(deleted_mask(st2)[0])              # tombstone untouched
+
+    # release the tombstone; the auto sync reset lets a reused slot ship
+    st3 = release_tombstones(st2)
+    assert not deleted_mask(st3).any()
+    pkt2, sync = collect_updates(st3, sync, kn, tick=2)   # resets slot 0
+    assert sync.synced_version[0] == 0
+    st4 = associate(st3, det, frame=jnp.asarray(6), match_threshold=2.0,
+                    point_budget=16)
+    assert int(st4.ids[0]) != 0                    # slot 0 reused now
+    pkt3, sync = collect_updates(st4, sync, kn, tick=3)
+    assert int(st4.ids[0]) in {int(u.oid) for u in pkt3.updates}
+
+
+def test_apply_tombstone_for_unknown_id_is_noop():
+    m = init_local_map(KN, E)
+    store = synthetic_store(2, KN.server_capacity, E, 64, seed=3)
+    store = remove_objects(store, [1, 2])
+    pkt, _ = collect_updates(
+        store, init_sync(KN.server_capacity)._replace(
+            synced_version=np.ones((KN.server_capacity,), np.int32)),
+        KN, tick=0)
+    assert pkt.count == 2
+    out = apply_updates_batch(m, pkt.batch,
+                              jnp.zeros(pkt.batch.oid.shape[0]))
+    assert not bool(out.active.any())
+    assert int(out.ids.sum()) == 0
+
+
+def test_fleet_zone_tombstone_propagation():
+    """Removal crosses the zone-shard mirror: subscribed clients get the
+    tombstone, the shard slot frees after global release, and per-client
+    bytes stay exact."""
+    store = synthetic_store(12, KN.server_capacity, E, 64, seed=3)
+    grid = ZoneGrid.for_room(8.0, nx=2, nz=1)
+    fs = FleetServer(knobs=KN, embed_dim=E, n_clients=2, grid=grid,
+                     budget=32)
+    fs.refresh(store)
+    fs.join(0, np.array([-2.0, 1.5, 0.0]), 10.0)     # both zones
+    fs.join(1, np.array([2.0, 1.5, 0.0]), 10.0)
+    devs = [DeviceClient(knobs=KN, embed_dim=E) for _ in range(2)]
+    both = np.array([True, True])
+    for _ in range(3):
+        for _, pkt in fs.tick(both):
+            for c in range(2):
+                p = pkt.packet_for(c)
+                if p.count:
+                    devs[c].ingest(p, user_pos=jnp.zeros(3))
+    for c in range(2):
+        assert _client_ids(devs[c].local) == set(range(1, 13))
+
+    store = remove_objects(store, [1, 2, 3])
+    fs.refresh(store)
+    packets = fs.tick(both)
+    per = fs.per_client_nbytes(packets)
+    assert (per == 3 * TOMBSTONE_NBYTES).all()
+    for _, pkt in packets:
+        for c in range(2):
+            p = pkt.packet_for(c)
+            if p.count:
+                devs[c].ingest(p, user_pos=jnp.zeros(3))
+    for c in range(2):
+        assert _client_ids(devs[c].local) == set(range(4, 13))
+
+    # quiesce, then retire: the shard slots free and nothing re-ships
+    while True:
+        pk = fs.tick(both)
+        if not pk or all((p.counts == 0).all() for _, p in pk):
+            break
+    store = release_tombstones(store)
+    fs.refresh(store)
+    pk = fs.tick(both)
+    assert not pk or all((p.nbytes == 0).all() for _, p in pk)
+    assert sum(int(np.asarray(deleted_mask(z)).sum())
+               for z in fs.zoned.zones) == 0
+
+
+# ---------------------------------------------------------------------------
+def test_per_class_point_budget_honored():
+    """Satellite: Knobs.class_point_overrides caps per-class points in the
+    packet (the seed silently shipped max_object_points_client for every
+    class) with exact per-row byte accounting."""
+    kn = Knobs(server_capacity=64, client_capacity=64,
+               max_object_points_server=64, max_object_points_client=16,
+               min_obs_before_sync=1,
+               class_point_overrides=((3, 4), (1, 8)))
+    store = synthetic_store(12, 64, E, 64, seed=5, n_labels=5)
+    pkt, _ = collect_updates(store, init_sync(64), kn, tick=0)
+    lab = np.asarray(pkt.batch.label)[:pkt.count]
+    npts = np.asarray(pkt.batch.n_points)[:pkt.count]
+    n_src = np.asarray(store.n_points)[np.asarray(store.active)]
+    assert (npts[lab == 3] <= 4).all() and (npts[lab == 3] > 0).all()
+    assert (npts[lab == 1] <= 8).all()
+    # non-overridden classes keep the default budget
+    other = ~np.isin(lab, [1, 3])
+    assert (npts[other] <= kn.max_object_points_client).all()
+    assert npts[other].max() == min(kn.max_object_points_client,
+                                    int(n_src.max()))
+    # byte accounting follows the per-row (not per-knob) point counts
+    assert pkt.nbytes == sum(update_nbytes(E, int(n)) for n in npts)
+    # the device applies the mixed-budget batch unchanged
+    dev = DeviceClient(knobs=kn, embed_dim=E)
+    dev.ingest(pkt, user_pos=jnp.zeros(3))
+    got = {int(i): int(n) for i, n, a in
+           zip(np.asarray(dev.local.ids), np.asarray(dev.local.n_points),
+               np.asarray(dev.local.active)) if a}
+    want = {int(o): int(n) for o, n in
+            zip(np.asarray(pkt.batch.oid)[:pkt.count], npts)}
+    assert got == want
+
+
+def test_no_overrides_matches_seed_byte_accounting():
+    """With no overrides the dynamic-budget gather is byte-identical to
+    the seed static path (regression guard for Fig. 6 numbers)."""
+    store = synthetic_store(10, 64, E, 64, seed=6)
+    pkt, _ = collect_updates(store, init_sync(64), KN, tick=0)
+    n_src = np.asarray(store.n_points)[np.asarray(store.active)]
+    expect = sum(update_nbytes(E, min(int(n), KN.max_object_points_client))
+                 for n in n_src)
+    assert pkt.nbytes == expect
+
+
+# ---------------------------------------------------------------------------
+def test_outage_buffer_is_o1_and_converges():
+    """Satellite: CloudService coalesces a long outage into O(1) state and
+    the reconnect flush ships one packet that converges the client."""
+    class _Ref:                      # minimal MappingServer stand-in
+        pass
+
+    ref = _Ref()
+    ref.store = synthetic_store(8, KN.server_capacity, E, 64, seed=7)
+    cloud = CloudService(knobs=KN, store_ref=ref)
+    dev = DeviceClient(knobs=KN, embed_dim=E)
+
+    pkt = cloud.update_tick(network_up=True)
+    dev.ingest(pkt, user_pos=jnp.zeros(3))
+
+    # 500-tick outage with churn: buffered state must stay O(1)
+    for i in range(500):
+        if i == 10:
+            ref.store = remove_objects(ref.store, [1, 2])
+        if i == 20:
+            ref.store = ref.store._replace(
+                version=ref.store.version.at[4].add(1))
+        assert cloud.update_tick(network_up=False) is None
+    assert len(cloud.buffered) == 1          # coalesced, not a packet list
+    assert cloud.buffered.ticks == 500
+
+    flush = cloud.flush_buffer()
+    assert len(cloud.buffered) == 0
+    # ONE packet covers the whole outage: 2 tombstones + 1 refresh
+    assert flush.count == 3
+    assert sorted(flush.deleted_oids) == [1, 2]
+    dev.ingest(flush, user_pos=jnp.zeros(3))
+    assert _client_ids(dev.local) == {3, 4, 5, 6, 7, 8}
+    srv_ids = set(np.asarray(ref.store.ids)[
+        np.asarray(ref.store.active)].tolist())
+    assert _client_ids(dev.local) == srv_ids
+    assert int(dev.local.version[np.asarray(
+        dev.local.ids).tolist().index(5)]) == 2   # the refreshed object
