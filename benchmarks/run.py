@@ -13,9 +13,9 @@ ROOT = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(ROOT / "src"))
 sys.path.insert(0, str(ROOT))
 
-from benchmarks import (downstream_bw, fleet_scale, ingest_tick,
-                        local_map_scale, mapping_latency, power_model,
-                        query_engine, query_latency, roofline,
+from benchmarks import (downstream_bw, fault_tolerance, fleet_scale,
+                        ingest_tick, local_map_scale, mapping_latency,
+                        power_model, query_engine, query_latency, roofline,
                         scenario_suite, upstream_bw)
 
 SUITES = {
@@ -30,6 +30,7 @@ SUITES = {
     "fleet_scale": fleet_scale.run,
     "query_engine": query_engine.run,
     "scenario_suite": scenario_suite.run,
+    "fault_tolerance": fault_tolerance.run,
 }
 
 

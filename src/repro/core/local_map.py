@@ -105,7 +105,14 @@ def _admit_one(m: LocalMap, u: ObjectUpdate, priority: jax.Array,
     A tombstone row (``u.deleted``) frees the matching slot instead of
     admitting: id retired, entry deactivated — the slot is immediately
     reusable by later rows of the same batch (scan order).  Tombstones for
-    ids the map never retained are no-ops."""
+    ids the map never retained are no-ops.
+
+    Idempotent and order-tolerant per object: a row whose version is BELOW
+    the retained entry's is stale (a duplicated or reordered delivery) and
+    is dropped; an equal-version row rewrites the same bytes (a no-op on
+    the payload, refreshing only the priority).  The hardened transport
+    leans on this — replaying any suffix of a client's update stream must
+    never regress the map."""
     is_del = jnp.asarray(False) if u.deleted is None else u.deleted
     # existing entry?
     hit = (m.ids == u.oid) & m.active
@@ -120,8 +127,9 @@ def _admit_one(m: LocalMap, u: ObjectUpdate, priority: jax.Array,
     can_evict = priority > evict_pri[slot_evict]
     slot = jnp.where(has, slot_existing,
                      jnp.where(has_free, slot_free, slot_evict))
-    admit = (has | has_free | can_evict) & enabled & ~is_del
-    erase = is_del & has & enabled
+    stale = has & (u.version < m.version[slot_existing])
+    admit = (has | has_free | can_evict) & enabled & ~is_del & ~stale
+    erase = is_del & has & enabled & ~stale
 
     def free_slot(m: LocalMap) -> LocalMap:
         return m._replace(
@@ -147,6 +155,21 @@ def _admit_one(m: LocalMap, u: ObjectUpdate, priority: jax.Array,
         )
 
     return jax.lax.cond(admit, write, lambda x: x, m)
+
+
+def prune_slots(m: LocalMap, drop: jax.Array) -> LocalMap:
+    """Deactivate every entry where ``drop`` [cap] is True (id retired,
+    version forgotten, slot reusable).  The zone-leave staleness fix rides
+    this: when a client unsubscribes from a zone, the entries whose
+    centroids route there are pruned so a later re-join ships a clean
+    catch-up instead of leaving dead objects answering local queries."""
+    keep = ~drop
+    return m._replace(
+        ids=jnp.where(keep, m.ids, 0),
+        active=m.active & keep,
+        version=jnp.where(keep, m.version, 0),
+        n_points=jnp.where(keep, m.n_points, 0),
+        priority=jnp.where(keep, m.priority, 0.0))
 
 
 def apply_update(m: LocalMap, u: ObjectUpdate, priority: jax.Array) -> LocalMap:

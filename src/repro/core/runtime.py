@@ -16,6 +16,7 @@ streaming power from the +2% figure.
 """
 from __future__ import annotations
 
+import copy
 import functools
 import time
 from dataclasses import dataclass, field
@@ -28,9 +29,10 @@ from repro.core import query as query_mod
 from repro.core.knobs import Knobs
 from repro.core.local_map import (LocalMap, apply_update, apply_updates_batch,
                                   compute_priority, init_local_map,
-                                  local_map_nbytes)
+                                  local_map_nbytes, prune_slots)
 from repro.core.store import ObjectStore
-from repro.core.updates import SyncState, collect_updates, init_sync
+from repro.core.updates import (ACK_NBYTES, RESYNC_NBYTES, SyncState,
+                                collect_updates, init_sync)
 
 
 # ---------------------------------------------------------------------------
@@ -71,6 +73,53 @@ class NetworkModel:
     def measured_latency_ms(self, t: float) -> float:
         """What the client's RGB-D stream monitor observes (Sec. 3.2)."""
         return float("inf") if not self.is_up(t) else self.rtt_ms
+
+
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class FaultModel:
+    """Seeded hostile-network fault injection + hardened-protocol knobs.
+
+    Outage windows (NetworkModel) model a *clean* link going away; this
+    models the link misbehaving while nominally up: per-packet loss,
+    duplication, reordering (bounded extra delay on a copy), and
+    truncation/corruption (checksum mismatch at the receiver -> drop).
+    Every draw is keyed on (seed, stream tag, client, zone, epoch, seq), so
+    a scenario replays its faults bit-identically — chaos runs are as
+    deterministic as clean ones.
+
+    The protocol knobs ride here too: the client's gap-detection resync
+    timeout (exponential backoff, capped) and the server's retransmit
+    timeout in ticks (oldest unacked in-flight packet older than this ->
+    roll the client's sync vectors back to its acked state and re-ship
+    under a bumped epoch)."""
+    seed: int = 0
+    loss_prob: float = 0.0
+    dup_prob: float = 0.0
+    reorder_prob: float = 0.0
+    reorder_jitter_s: float = 2.0
+    corrupt_prob: float = 0.0
+    # hardened-protocol knobs
+    resync_timeout_s: float = 2.0
+    resync_backoff_cap_s: float = 16.0
+    retx_ticks: int = 3
+
+    def packet_draws(self, cid: int, zone: int, epoch: int,
+                     seq: int) -> np.ndarray:
+        """[9] uniform draws for one downlink packet, a fixed layout so
+        branch-free replay holds: [dup?, loss c0, loss c1, reorder c0,
+        reorder c1, jitter c0, jitter c1, corrupt c0, corrupt c1]."""
+        rng = np.random.default_rng((self.seed, 3, cid, zone,
+                                     max(epoch, 0), seq))
+        return rng.random(9)
+
+    def uplink_lost(self, tag: int, cid: int, tick: int, a: int,
+                    b: int) -> bool:
+        """Loss draw for one upstream control frame (ack/resync)."""
+        if self.loss_prob <= 0.0:
+            return False
+        rng = np.random.default_rng((self.seed, 5, tag, cid, tick, a, b))
+        return bool(rng.random() < self.loss_prob)
 
 
 @dataclass
@@ -265,6 +314,22 @@ class ClientSession:
     (server/fleet.py) — one code path for packet delivery (outage-aware:
     a transfer straddling an outage start is delayed, not delivered at
     pre-outage latency), ingest, byte accounting, and SQ/LQ mode choice.
+
+    Two transports share the receive path:
+
+    * ``faults is None`` (clean link) — the legacy behavior, byte- and
+      tick-identical to the pre-hardening protocol: FIFO delivery, ingest
+      within the send tick when the link allows.  Packets that carry
+      protocol framing (``seq``/``epoch`` from the fleet tier) still run
+      the sequencing/ack bookkeeping — FIFO delivery trivially satisfies
+      the in-order apply, and the emitted cumulative acks are what drives
+      the server's sync-vector slot retirement.
+    * ``faults`` set — the fault-injection transport: per-packet seeded
+      loss/duplication/reordering/corruption draws, delivery strictly via
+      the in-flight queue (so reordered copies really arrive out of
+      order), checksum verification, a per-zone reorder buffer with
+      in-order apply, and gap-detection resync requests with exponential
+      backoff.
     """
     dev: DeviceClient
     net: NetworkModel
@@ -272,12 +337,28 @@ class ClientSession:
     user_pos: object = None            # [3] — priority/eviction anchor
     interest_embeds: object = None
     dt: float = 1.0                    # tick period (seconds)
+    cid: int = 0                       # fault-draw key (fleet client id)
+    faults: FaultModel | None = None   # None = clean legacy transport
     down_bytes: int = 0
+    up_bytes: int = 0                  # ack/resync control frames (hardened
+    #                                    accounting only)
     delivered: int = 0                 # packets actually ingested
     delayed: int = 0                   # packets not ingested within their
     #                                    send tick (outage straddle, slow
     #                                    link, or FIFO backlog)
+    # fault/protocol counters (cumulative; the engine logs per-tick deltas)
+    lost: int = 0                      # downlink packets the channel ate
+    dup_drops: int = 0                 # duplicate deliveries discarded
+    corrupt_drops: int = 0             # checksum-failed deliveries discarded
+    resyncs: int = 0                   # resync requests issued
+    epoch: int = -1                    # adopted server sync epoch
     pending: list = field(default_factory=list)   # [(deliver_at, packet)]
+    acks: list = field(default_factory=list)      # [(zone, epoch, seq)] out
+    ctrl: list = field(default_factory=list)      # [("resync", zone)] out
+    _expect: dict = field(default_factory=dict)   # zone -> next seq to apply
+    _reorder: dict = field(default_factory=dict)  # zone -> {seq: packet}
+    _gap_since: dict = field(default_factory=dict)   # zone -> gap open time
+    _backoff: dict = field(default_factory=dict)  # zone -> current timeout
 
     def __post_init__(self):
         if self.user_pos is None:
@@ -289,31 +370,193 @@ class ClientSession:
         self.down_bytes += packet.nbytes
         self.delivered += 1
 
+    # -- hardened receive path ---------------------------------------------
+    def _adopt_epoch(self, epoch: int, fresh: bool) -> None:
+        """A packet from a newer epoch: the server rolled this client back
+        (resync / retransmit timeout) or restarted it (join / crash
+        recovery / lease expiry).  Sequence streams restart at 0; a fresh
+        epoch also resets the device map — the catch-up that follows is the
+        whole subscribed store, so nothing stale can survive."""
+        self.epoch = epoch
+        self._expect = {}
+        self._reorder = {}
+        self._gap_since = {}
+        self._backoff = {}
+        if fresh:
+            self.dev.local = init_local_map(self.dev.knobs,
+                                            self.dev.embed_dim)
+
+    def _ack(self, zone: int, seq: int) -> None:
+        self.acks.append((zone, self.epoch, seq))
+        if self.faults is not None:
+            self.up_bytes += ACK_NBYTES
+
+    def _receive(self, t: float, packet) -> None:
+        """Apply one arrived packet through the protocol state machine.
+        Unframed packets (legacy single-client path: ``seq is None``) apply
+        directly — the CloudService sync vector is their ordering."""
+        if getattr(packet, "seq", None) is None:
+            self._ingest(packet)
+            return
+        if not packet.checksum_ok():
+            self.corrupt_drops += 1
+            return
+        if packet.epoch < self.epoch:
+            return                         # pre-resync straggler: discard
+        if packet.epoch > self.epoch:
+            self._adopt_epoch(packet.epoch, packet.fresh)
+        z = packet.zone
+        exp = self._expect.get(z, 0)
+        if packet.seq < exp:
+            # duplicate of an applied packet; re-ack in case the original
+            # cumulative ack was lost upstream
+            self.dup_drops += 1
+            self._ack(z, exp - 1)
+            return
+        if packet.seq > exp:
+            buf = self._reorder.setdefault(z, {})
+            if packet.seq not in buf:
+                buf[packet.seq] = packet
+            else:
+                self.dup_drops += 1
+            self._gap_since.setdefault(z, t)
+            return
+        # in order: apply, then drain whatever the gap was holding back
+        buf = self._reorder.get(z, {})
+        seq = packet.seq
+        while True:
+            self._ingest(packet)
+            seq += 1
+            if seq in buf:
+                packet = buf.pop(seq)
+            else:
+                break
+        self._expect[z] = seq
+        self._ack(z, seq - 1)              # cumulative: covers the run
+        if buf:
+            self._gap_since[z] = t         # a later gap is still open
+        else:
+            self._gap_since.pop(z, None)
+            self._backoff.pop(z, None)
+
+    def _clean_delivery_at(self, t: float, nbytes: int) -> float:
+        send = t
+        while (at := self.net.delivery_time(send, nbytes)) is None:
+            # sender raced an outage start: retransmit after it ends
+            # (walk successive windows — outages may be back-to-back)
+            send = max(b for a, b in self.net.outages if a <= send < b)
+        return at
+
+    def _send_faulty(self, t: float, packet) -> None:
+        """Fault-injection downlink: seeded per-packet draws decide loss,
+        duplication, reordering jitter, and corruption per copy.  Delivery
+        is NOT FIFO-clamped — each copy matures at its own time, so a
+        jittered copy really is overtaken (the seq layer re-orders)."""
+        fm = self.faults
+        seq = packet.seq if packet.seq is not None else (1 << 20) + packet.tick
+        r = fm.packet_draws(self.cid, packet.zone, packet.epoch, seq)
+        copies = 2 if r[0] < fm.dup_prob else 1
+        for k in range(copies):
+            if r[1 + k] < fm.loss_prob:
+                self.lost += 1
+                continue
+            at = self._clean_delivery_at(t, packet.nbytes)
+            if r[3 + k] < fm.reorder_prob:
+                at += float(r[5 + k]) * fm.reorder_jitter_s
+            p = packet
+            if r[7 + k] < fm.corrupt_prob and packet.checksum is not None:
+                p = copy.copy(packet)
+                p.checksum = packet.checksum ^ 0x5A5A5A5A
+            if at > t + self.dt:
+                self.delayed += 1
+            self.pending.append((at, p))
+
+    def _check_gaps(self, t: float) -> None:
+        """Gap open past the (backed-off) timeout -> queue a resync request
+        for the engine to carry upstream.  The server answers by rolling
+        the whole client back to its acked state under a bumped epoch."""
+        fm = self.faults
+        for z, since in list(self._gap_since.items()):
+            wait = self._backoff.get(z, fm.resync_timeout_s)
+            if t - since >= wait:
+                self.ctrl.append(("resync", z))
+                self.resyncs += 1
+                self.up_bytes += RESYNC_NBYTES
+                self._gap_since[z] = t
+                self._backoff[z] = min(wait * 2, fm.resync_backoff_cap_s)
+
+    # -- engine drains (control-plane outboxes) ----------------------------
+    def drain_acks(self) -> list:
+        out, self.acks = self.acks, []
+        return out
+
+    def drain_ctrl(self) -> list:
+        out, self.ctrl = self.ctrl, []
+        return out
+
+    def prune_zones(self, grid, subscribed: np.ndarray) -> int:
+        """Prune-on-unsubscribe: drop retained objects whose centroids
+        route to zones the client no longer subscribes to (zone-leave
+        staleness fix — without it a returning client keeps answering
+        local queries from dead state it will never receive tombstones
+        for).  Returns how many entries were pruned."""
+        m = self.dev.local
+        act = np.asarray(m.active)
+        if not act.any():
+            return 0
+        z = grid.zone_of(np.asarray(m.centroid))
+        drop = act & ~np.asarray(subscribed, bool)[z]
+        n = int(drop.sum())
+        if n:
+            self.dev.local = prune_slots(m, jnp.asarray(drop))
+        return n
+
+    def crash(self) -> None:
+        """Device restart: volatile state is gone — the local map, every
+        in-flight packet, the protocol position.  Cumulative traffic
+        counters survive (they model the *session's* accounting, and the
+        engine logs deltas).  The server notices via the join path: the
+        rejoin bumps the epoch with fresh=True, forcing a full catch-up
+        instead of silently replaying stale sync state."""
+        self.pending.clear()
+        self.acks.clear()
+        self.ctrl.clear()
+        self.dev.local = init_local_map(self.dev.knobs, self.dev.embed_dim)
+        self.epoch = -1
+        self._expect = {}
+        self._reorder = {}
+        self._gap_since = {}
+        self._backoff = {}
+
+    # -- the per-tick step -------------------------------------------------
     def step(self, t: float, packet=None) -> str:
         """Advance to time ``t``: deliver matured in-flight packets, send
         ``packet`` (ingesting within the tick unless an outage delays it),
         and return the query mode ("SQ"/"LQ") for this tick.
 
-        Delivery is FIFO per link: a packet sent while older packets are
-        still in flight queues behind them, so a later (newer-version)
-        packet can never overtake a delayed one and then be overwritten by
-        it when the stale packet matures."""
+        Clean-link delivery is FIFO per link: a packet sent while older
+        packets are still in flight queues behind them, so a later
+        (newer-version) packet can never overtake a delayed one and then
+        be overwritten by it when the stale packet matures.  Under the
+        fault-injection transport the FIFO clamp is OFF (reordering is the
+        point) and the sequencing layer provides the ordering instead."""
         matured = sorted((p for p in self.pending if p[0] <= t),
                          key=lambda p: p[0])
         self.pending = [p for p in self.pending if p[0] > t]
         for _, p in matured:
-            self._ingest(p)
+            self._receive(t, p)
         if packet is not None and packet.count > 0:
-            send = t
-            while (at := self.net.delivery_time(send, packet.nbytes)) is None:
-                # sender raced an outage start: retransmit after it ends
-                # (walk successive windows — outages may be back-to-back)
-                send = max(b for a, b in self.net.outages if a <= send < b)
-            if self.pending:
-                at = max(at, self.pending[-1][0])      # FIFO behind in-flight
-            if not self.pending and at <= t + self.dt:
-                self._ingest(packet)
+            if self.faults is not None:
+                self._send_faulty(t, packet)
             else:
-                self.delayed += 1
-                self.pending.append((at, packet))
+                at = self._clean_delivery_at(t, packet.nbytes)
+                if self.pending:
+                    at = max(at, self.pending[-1][0])  # FIFO behind in-flight
+                if not self.pending and at <= t + self.dt:
+                    self._receive(t, packet)
+                else:
+                    self.delayed += 1
+                    self.pending.append((at, packet))
+        if self.faults is not None:
+            self._check_gaps(t)
         return choose_mode(self.net, t, self.knobs)

@@ -19,6 +19,7 @@ benchmark (Fig. 6) reads these numbers.
 from __future__ import annotations
 
 import functools
+import zlib
 from dataclasses import dataclass
 from typing import NamedTuple
 
@@ -38,6 +39,15 @@ from repro.core.store import ObjectStore, deleted_mask
 # fields it has no use for: id(4) + version(4) + flagged n_points(1) = 9 B.
 _HEADER_B = 4 + 2 + 4 + 2 + 12
 TOMBSTONE_NBYTES = 9
+
+# hardened-protocol framing (counted only when the fault-injection
+# transport is on — the clean-link wire format above is unchanged):
+# per-packet header seq(4) + epoch(4) + flags(1) + crc32(4), and the
+# fixed-size upstream control frames (cumulative ack / resync request):
+# zone(2) + epoch(4) + seq-or-reason(4) + crc under the radio MTU floor.
+PROTO_HEADER_NBYTES = 13
+ACK_NBYTES = 12
+RESYNC_NBYTES = 12
 
 _MIN_BUCKET = 8
 
@@ -100,6 +110,34 @@ class UpdatePacket:
     count: int                   # live rows in batch (rest is padding)
     nbytes: int
     tick: int
+    # hardened-protocol framing (defaults keep the legacy single-client
+    # path protocol-free: seq None means "apply on arrival, no ordering")
+    zone: int = 0                # zone shard this packet's seq stream is for
+    seq: int | None = None       # per-(client, zone) sequence number
+    epoch: int = 0               # per-client sync epoch (bumped on resync)
+    fresh: bool = False          # epoch started from scratch: the client
+    #                              must reset its map before applying
+    checksum: int | None = None  # crc32 over header + id/version columns
+    #                              (None = unframed; set only under the
+    #                              fault-injection transport)
+
+    def compute_checksum(self) -> int:
+        """crc32 over the packet header and the id/version columns — enough
+        to catch the simulated truncation/corruption faults (payload bit
+        flips ride the same drop-on-mismatch path in a real stack)."""
+        head = np.array([self.count, self.zone, self.epoch,
+                         -1 if self.seq is None else self.seq],
+                        np.int64).tobytes()
+        if self.batch is None or self.count == 0:
+            return zlib.crc32(head)
+        o = np.asarray(self.batch.oid)[:self.count].astype(np.int64)
+        v = np.asarray(self.batch.version)[:self.count].astype(np.int64)
+        return zlib.crc32(head + o.tobytes() + v.tobytes())
+
+    def checksum_ok(self) -> bool:
+        """True when unframed, or the framed checksum verifies."""
+        return self.checksum is None \
+            or self.checksum == self.compute_checksum()
 
     @property
     def updates(self) -> list:

@@ -36,15 +36,31 @@ from repro.server.zones import ZoneGrid, ZoneShardedStore
 # ---------------------------------------------------------------------------
 @dataclass
 class FleetServer:
-    """Zone-sharded store + per-zone multi-client sync sessions."""
+    """Zone-sharded store + per-zone multi-client sync sessions.
+
+    The hardened control plane lives here: per-client sync epochs (bumped
+    on resync / rejoin / retransmit timeout), cumulative-ack routing into
+    the per-zone sessions, and sync-vector-driven tombstone retirement —
+    a deleted slot is releasable only once every subscriber's ACKED
+    version covers the deletion, with a lease timeout evicting
+    permanently-partitioned clients so they can't leak slots forever."""
     knobs: Knobs
     embed_dim: int
     n_clients: int
     grid: ZoneGrid
     budget: int = 64                   # per-client objects per tick per zone
+    proto: bool = False                # fault-injection transport framing
     zoned: ZoneShardedStore = None
     sessions: list = field(default_factory=list)   # one SessionManager/zone
     subscribed: np.ndarray = None      # [C, Z] bool (host mirror)
+    epoch: np.ndarray = None           # [C] int64 per-client sync epoch
+    epoch_fresh: np.ndarray = None     # [C] bool — epoch restarted from
+    #                                    scratch (client resets its map on
+    #                                    adoption); cleared on first ack
+    last_ack_tick: np.ndarray = None   # [C] int64 — lease bookkeeping
+    needs_fresh: np.ndarray = None     # [C] bool — lease expired: next
+    #                                    deliverable tick forces a fresh
+    #                                    epoch instead of trusting state
 
     def __post_init__(self):
         if self.zoned is None:
@@ -55,12 +71,21 @@ class FleetServer:
             self.sessions = [
                 SessionManager(knobs=self.knobs, n_clients=self.n_clients,
                                capacity=self.zoned.zone_capacity,
-                               budget=self.budget,
+                               budget=self.budget, proto=self.proto,
                                subscribed=np.zeros((self.n_clients,), bool))
                 for _ in range(self.grid.n_zones)]
         if self.subscribed is None:
             self.subscribed = np.zeros((self.n_clients, self.grid.n_zones),
                                        bool)
+        C = self.n_clients
+        if self.epoch is None:
+            self.epoch = np.zeros((C,), np.int64)
+        if self.epoch_fresh is None:
+            self.epoch_fresh = np.zeros((C,), bool)
+        if self.last_ack_tick is None:
+            self.last_ack_tick = np.zeros((C,), np.int64)
+        if self.needs_fresh is None:
+            self.needs_fresh = np.zeros((C,), bool)
 
     # -- control plane -----------------------------------------------------
     def refresh(self, store: ObjectStore):
@@ -77,22 +102,121 @@ class FleetServer:
 
     def set_client_pose(self, c: int, pos, radius: float):
         subs = self.zoned.subscriptions(pos, radius)
+        left = self.subscribed[c] & ~subs
         self.subscribed[c] = subs
         for z in range(self.grid.n_zones):
+            if left[z]:
+                # zone exit: forget what the client held there (it prunes
+                # its side too — prune-on-unsubscribe), so re-entry ships a
+                # clean catch-up instead of trusting stale state.  The seq
+                # stream survives: no epoch bump for a mere zone crossing.
+                self.sessions[z].reset_client(c, keep_seq=True)
             self.sessions[z].set_client(c, user_pos=pos, subscribed=subs[z])
 
-    def join(self, c: int, pos, radius: float):
+    def _bump_epoch(self, c: int, *, fresh: bool):
+        """Advance the client's sync epoch.  fresh=True restarts the whole
+        session (join / crash recovery / lease expiry: client resets its
+        map, server forgets sync + acked state); fresh=False is a resync
+        rollback (sync falls back to acked, un-acked delta re-ships).
+
+        A pending fresh flag is sticky: if the client never acked the
+        fresh epoch (its packets may all have been lost), a follow-up
+        resync bump must stay fresh — downgrading to a rollback would let
+        the client keep a map the server has already written off."""
+        fresh = fresh or bool(self.epoch_fresh[c])
+        self.epoch[c] += 1
+        self.epoch_fresh[c] = fresh
         for s in self.sessions:
-            s.reset_client(c)
+            if fresh:
+                s.reset_client(c)
+            else:
+                s.rollback(c)
+
+    def join(self, c: int, pos, radius: float, *, tick: int = 0):
+        self._bump_epoch(c, fresh=True)
+        self.last_ack_tick[c] = tick
+        self.needs_fresh[c] = False
         self.set_client_pose(c, pos, radius)
 
     def leave(self, c: int):
         self.subscribed[c] = False
         for s in self.sessions:
+            s.reset_client(c)          # a gone client must not pin slots
             s.set_client(c, subscribed=False)
 
+    def crash(self, c: int):
+        """The device restarted: its volatile protocol/map state is gone.
+        Drop the server-side session rows so nothing stale blocks
+        retirement while it is down; the rejoin (`join`) hands it a fresh
+        epoch and a full catch-up."""
+        for s in self.sessions:
+            s.reset_client(c)
+
+    # -- hardened-protocol control plane -----------------------------------
+    def ack(self, c: int, zone: int, epoch: int, seq: int, *, tick: int = 0):
+        """Route a client's cumulative ack ``(zone, epoch, seq)`` into the
+        zone session.  Acks from a superseded epoch are dropped — their seq
+        numbering no longer matches the stream."""
+        if epoch != int(self.epoch[c]):
+            return
+        self.epoch_fresh[c] = False    # client adopted: later packets cont
+        self.last_ack_tick[c] = tick
+        self.sessions[zone].ack(c, seq)
+
+    def request_resync(self, c: int):
+        """Client detected an unrecoverable gap: roll it back to its acked
+        state under a bumped epoch (its reorder buffers restart too)."""
+        self._bump_epoch(c, fresh=False)
+
+    def maintain(self, *, tick: int, deliverable: np.ndarray,
+                 retx_ticks: int):
+        """Server-side retransmit timeout: a reachable client whose oldest
+        un-acked packet has aged past ``retx_ticks`` is rolled back (cont
+        epoch) so the un-acked delta re-ships — covers tail loss the
+        client-side gap detector can't see (nothing after the hole)."""
+        for c in range(self.n_clients):
+            if not deliverable[c] or not self.subscribed[c].any():
+                continue
+            oldest = [t for s in self.sessions
+                      if (t := s.oldest_unacked_tick(c)) is not None]
+            if oldest and tick - min(oldest) >= retx_ticks:
+                self._bump_epoch(c, fresh=False)
+
+    def blocked_tombstone_oids(self, *, tick: int,
+                               lease_ticks: int | None = None) -> set:
+        """Object ids whose tombstoned slots must NOT be released yet:
+        some subscriber's acked version does not cover the deletion.
+
+        The lease is the partition escape hatch: a client that owes
+        deletions and hasn't acked anything for ``lease_ticks`` forfeits
+        its hold — its next deliverable tick starts a fresh epoch (full
+        catch-up), so correctness survives the forfeit.  Clients owing
+        nothing keep their lease trivially current (an idle caught-up
+        client is never expired into a spurious resync)."""
+        owes = np.zeros((self.n_clients,), bool)
+        debt = []
+        for z, sess in enumerate(self.sessions):
+            d = sess.deletion_debt(self.zoned.zones[z])    # [C, N]
+            d &= sess.subscribed[:, None]
+            debt.append(d)
+            owes |= d.any(axis=1)
+        self.last_ack_tick[~owes] = tick
+        if lease_ticks is not None:
+            expired = owes & (tick - self.last_ack_tick >= lease_ticks)
+            if expired.any():
+                self.needs_fresh |= expired
+                for z in range(len(debt)):
+                    debt[z][expired] = False
+        blocked = set()
+        for z, d in enumerate(debt):
+            slots = np.nonzero(d.any(axis=0))[0]
+            if len(slots):
+                ids = np.asarray(self.zoned.zones[z].ids)[slots]
+                blocked.update(int(i) for i in ids)
+        return blocked
+
     # -- hot path ------------------------------------------------------------
-    def tick(self, deliverable: np.ndarray) -> list:
+    def tick(self, deliverable: np.ndarray, *, tick: int | None = None) -> list:
         """One fleet update tick: one vmapped collect per DIRTY zone that
         has a deliverable subscriber.  A zone is clean (skipped outright)
         when its last collect covered every subscriber and shipped nothing,
@@ -100,12 +224,23 @@ class FleetServer:
         idle-tick cost scales with changed zones, not zone count.  Returns
         [(zone, FleetPacket)] — per-client packets are leading-dim views.
         """
+        pend = self.needs_fresh & np.asarray(deliverable, bool) \
+            & self.subscribed.any(axis=1)
+        for c in np.nonzero(pend)[0]:
+            # lease expired while partitioned: now that the client is
+            # reachable again, restart its session under a fresh epoch
+            self._bump_epoch(int(c), fresh=True)
+            self.last_ack_tick[c] = self.sessions[0].tick if tick is None \
+                else tick
+            self.needs_fresh[c] = False
         out = []
         for z, sess in enumerate(self.sessions):
             if not sess.dirty or not (sess.subscribed & deliverable).any():
                 continue
             out.append((z, sess.collect(self.zoned.zones[z],
-                                        deliverable=deliverable)))
+                                        deliverable=deliverable, zone=z,
+                                        epoch=self.epoch,
+                                        fresh=self.epoch_fresh, now=tick)))
         return out
 
     def per_client_nbytes(self, packets: list) -> np.ndarray:

@@ -24,7 +24,8 @@ tests/test_fleet.py.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from collections import deque
+from dataclasses import dataclass, field
 from typing import NamedTuple
 
 import numpy as np
@@ -35,7 +36,9 @@ from repro.core import geometry as geo
 from repro.core.knobs import Knobs
 from repro.core.local_map import UpdateBatch, compute_priority
 from repro.core.store import ObjectStore, deleted_mask
-from repro.core.updates import _HEADER_B, TOMBSTONE_NBYTES, UpdatePacket
+from repro.core.updates import (_HEADER_B, PROTO_HEADER_NBYTES,
+                                TOMBSTONE_NBYTES, UpdatePacket,
+                                class_budget_table)
 
 
 class FleetSync(NamedTuple):
@@ -57,39 +60,53 @@ class FleetBatch(NamedTuple):
 
 
 def _downsample_gather(points: jax.Array, n_points: jax.Array,
-                       idx: jax.Array, budget: int):
-    """Gather store rows ``idx`` [C, U] and stride-downsample to ``budget``
-    in one fused indexing op — identical semantics to geo.downsample
-    composed with the row gather, without materializing [C, U, Pserver, 3].
+                       idx: jax.Array, row_budget: jax.Array, budget: int):
+    """Gather store rows ``idx`` [C, U] and stride-downsample each row to
+    its own ``row_budget`` (per-class overrides; ``budget`` is the shared
+    buffer width and hard cap) in one fused indexing op — identical
+    semantics to geo.downsample_dyn composed with the row gather, without
+    materializing [C, U, Pserver, 3].
     """
     P = points.shape[1]
     n = jnp.maximum(n_points[idx], 1)                       # [C, U]
+    b = jnp.clip(row_budget, 1, budget)[..., None]          # [C, U, 1]
     ar = jnp.arange(budget)
-    sub = jnp.where(n[..., None] > budget, (ar * n[..., None]) // budget, ar)
+    sub = jnp.where(n[..., None] > b, (ar * n[..., None]) // b, ar)
     sub = jnp.minimum(sub, P - 1)                           # [C, U, B]
     out = points[idx[..., None], sub]                       # [C, U, B, 3]
-    n_out = jnp.minimum(n, budget).astype(jnp.int32)
+    n_out = jnp.minimum(n[..., None], b)[..., 0].astype(jnp.int32)
     valid = ar < n_out[..., None]
     return jnp.where(valid[..., None], out, 0.0), n_out
 
 
 @functools.partial(jax.jit,
                    static_argnames=("budget", "points_budget", "knobs"))
-def _collect_fleet(store: ObjectStore, synced: jax.Array, mask_c: jax.Array,
+def _collect_fleet(store: ObjectStore, synced: jax.Array,
+                   ever_sent: jax.Array, mask_c: jax.Array,
                    min_obs: jax.Array, user_pos: jax.Array,
-                   interest_embeds, *, budget: int, points_budget: int,
-                   knobs: Knobs):
+                   interest_embeds, class_budgets: jax.Array, *,
+                   budget: int, points_budget: int, knobs: Knobs):
     """One update tick for the whole fleet in a single dispatch.
 
-    Returns (FleetBatch, new_synced [C, N], nbytes [C], counts [C]).
+    ``class_budgets`` [256] is the per-class client point budget table
+    (updates.class_budget_table) — the fleet path honors
+    ``Knobs.class_point_overrides`` row-by-row exactly like the
+    single-client gather.
+
+    Returns (FleetBatch, new_synced [C, N], nbytes [C], counts [C],
+    idx [C, U] — the store slots behind each packet row, for the
+    sender's in-flight/ack bookkeeping).
     """
     dele = deleted_mask(store)
     live = (store.active[None]
             & (store.obs_count[None] >= min_obs[:, None])
             & (store.version[None] > synced))
-    # a tombstone ships to exactly the clients whose sync vector ever
-    # covered the object; clients that never held it delete nothing
-    tomb = (dele[None] & (synced > 0)
+    # a tombstone ships to exactly the clients the object was EVER shipped
+    # to; clients that never held it delete nothing.  ever_sent (not
+    # synced > 0) is the gate: a resync rollback drops sync to the acked
+    # vector, but the deletion must still reach a client whose ack was
+    # lost upstream.
+    tomb = (dele[None] & ever_sent
             & (store.version[None] > synced))
     changed = (live | tomb) & mask_c[:, None]
     pri = jax.vmap(lambda up: compute_priority(
@@ -102,7 +119,8 @@ def _collect_fleet(store: ObjectStore, synced: jax.Array, mask_c: jax.Array,
     valid = jnp.isfinite(top)
     row_del = jnp.take_along_axis(tomb, idx, axis=1) & valid  # [C, U]
 
-    pts, n = _downsample_gather(store.points, store.n_points, idx,
+    row_b = class_budgets[jnp.clip(store.label[idx], 0, 255)]
+    pts, n = _downsample_gather(store.points, store.n_points, idx, row_b,
                                 points_budget)
     n = jnp.where(row_del, 0, n)
     pts = jnp.where(row_del[..., None, None], 0.0, pts)
@@ -127,16 +145,28 @@ def _collect_fleet(store: ObjectStore, synced: jax.Array, mask_c: jax.Array,
     n_tomb = row_del.sum(axis=-1).astype(jnp.int32)
     nbytes = ((counts - n_tomb) * (_HEADER_B + 2 * E)
               + 6 * n_live.sum(axis=-1) + n_tomb * TOMBSTONE_NBYTES)
-    return batch, new_synced, nbytes, counts
+    return batch, new_synced, nbytes, counts, idx
 
 
 @dataclass
 class FleetPacket:
-    """One tick's C packets: the FleetBatch plus host-side accounting."""
+    """One tick's C packets: the FleetBatch plus host-side accounting.
+
+    When the session assigns sequence numbers (``seqs[c] >= 0``) the
+    single-client views carry the hardened-protocol framing: per-(client,
+    zone) seq, the client's sync epoch, and — under the fault-injection
+    transport (``proto``) — a crc32 checksum.  Framing bytes are counted
+    in ``nbytes`` only when ``proto`` is on, so the clean-link byte
+    accounting is unchanged."""
     batch: FleetBatch
     counts: np.ndarray       # [C] live rows per client
     nbytes: np.ndarray       # [C] exact wire bytes per client
     tick: int
+    zone: int = 0            # zone shard this packet's seq streams belong to
+    seqs: np.ndarray = None  # [C] int64 — per-client seq (-1 = unframed)
+    epoch: np.ndarray = None  # [C] int64 — per-client sync epoch
+    fresh: np.ndarray = None  # [C] bool — epoch restarted from scratch
+    proto: bool = False      # fault-injection transport: checksum + header
 
     @property
     def total_nbytes(self) -> int:
@@ -161,8 +191,16 @@ class FleetPacket:
                          centroid=b.centroid[c], version=b.version[c],
                          valid=b.valid[c],
                          deleted=None if b.deleted is None else b.deleted[c])
-        return UpdatePacket(batch=ub, count=cnt, nbytes=int(self.nbytes[c]),
-                            tick=self.tick)
+        pkt = UpdatePacket(batch=ub, count=cnt, nbytes=int(self.nbytes[c]),
+                           tick=self.tick)
+        if self.seqs is not None and int(self.seqs[c]) >= 0:
+            pkt.zone = self.zone
+            pkt.seq = int(self.seqs[c])
+            pkt.epoch = int(self.epoch[c])
+            pkt.fresh = bool(self.fresh[c])
+            if self.proto:
+                pkt.checksum = pkt.compute_checksum()
+        return pkt
 
 
 @dataclass
@@ -189,6 +227,21 @@ class SessionManager:
     dirty: bool = True                 # False only when the last collect
     #                                    covered every subscriber and
     #                                    shipped nothing (fleet quiesced)
+    proto: bool = False                # fault-injection transport on: count
+    #                                    framing bytes + checksum packets
+    acked: np.ndarray = None           # [C, N] int32 — versions each client
+    #                                    has CONFIRMED applying (cumulative
+    #                                    acks); trails sync, drives slot
+    #                                    retirement
+    next_seq: np.ndarray = None        # [C] int64 — next seq per client
+    inflight: list = None              # per-client deque of
+    #                                    (seq, tick, slots, versions)
+    ever_sent: np.ndarray = None       # [C, N] bool — row was EVER shipped
+    #                                    to the client; gates tombstones and
+    #                                    deletion debt.  Survives rollback
+    #                                    (unlike sync, which falls back to
+    #                                    acked): a lost upstream ack must
+    #                                    not suppress a later deletion.
 
     def __post_init__(self):
         C, N = self.n_clients, self.capacity
@@ -202,6 +255,15 @@ class SessionManager:
         if self.min_obs is None:
             self.min_obs = np.full((C,), self.knobs.min_obs_before_sync,
                                    np.int32)
+        if self.acked is None:
+            self.acked = np.zeros((C, N), np.int32)
+        if self.next_seq is None:
+            self.next_seq = np.zeros((C,), np.int64)
+        if self.inflight is None:
+            self.inflight = [deque() for _ in range(C)]
+        if self.ever_sent is None:
+            self.ever_sent = np.zeros((C, N), bool)
+        self._class_budgets = jnp.asarray(class_budget_table(self.knobs))
 
     # -- per-client knob management (control plane, off the hot path) ------
     def set_client(self, c: int, *, user_pos=None, min_obs=None,
@@ -217,35 +279,132 @@ class SessionManager:
                 self.dirty = True      # membership changed: re-collect
             self.subscribed[c] = bool(subscribed)
 
-    def reset_client(self, c: int):
-        """Fresh join: zero the sync row so the next tick ships a full
-        catch-up of the subscribed store."""
+    def reset_client(self, c: int, *, keep_seq: bool = False):
+        """Fresh join (or zone re-entry): zero the sync + acked rows so the
+        next tick ships a full catch-up of the subscribed store.
+
+        ``keep_seq=True`` preserves the client's sequence stream — used by
+        the zone-leave prune, where the client's protocol position must
+        survive the subscription gap (only epoch bumps may restart seqs,
+        because only they reset the client's expected-seq counters)."""
         self.dirty = True
         self.sync = FleetSync(self.sync.synced_version.at[c].set(0))
+        self.acked[c] = 0
+        self.ever_sent[c] = False
+        self.inflight[c].clear()
+        if not keep_seq:
+            self.next_seq[c] = 0
 
     def reset_slots(self, slots):
         """Store slots were freed/reassigned (zone shard slot reuse): forget
-        every client's synced version there so a future occupant ships."""
+        every client's synced AND acked version there so a future occupant
+        ships — and is never falsely 'already acked' by its predecessor's
+        confirmations.  In-flight entries scrub the slots too: an ack that
+        lands after the reuse must not re-mark them."""
         if len(slots):
             self.dirty = True
+            sl = np.asarray(slots)
             self.sync = FleetSync(
-                self.sync.synced_version.at[:, np.asarray(slots)].set(0))
+                self.sync.synced_version.at[:, sl].set(0))
+            self.acked[:, sl] = 0
+            self.ever_sent[:, sl] = False
+            for q in self.inflight:
+                for k, (seq, tk, islots, ivers) in enumerate(q):
+                    keep = ~np.isin(islots, sl)
+                    if not keep.all():
+                        q[k] = (seq, tk, islots[keep], ivers[keep])
+
+    # -- ack / resync bookkeeping (hardened protocol control plane) --------
+    def ack(self, c: int, seq: int):
+        """Cumulative ack: the client has applied every packet up to and
+        including ``seq`` — fold those in-flight versions into its acked
+        vector (monotonic: a stale duplicate ack can never regress it)."""
+        q = self.inflight[c]
+        while q and q[0][0] <= seq:
+            _, _, islots, ivers = q.popleft()
+            if len(islots):
+                self.acked[c, islots] = np.maximum(self.acked[c, islots],
+                                                   ivers)
+
+    def rollback(self, c: int):
+        """Resync: everything sent past the client's last cumulative ack is
+        presumed lost.  The sync row falls back to the acked vector, the
+        sequence stream restarts, and the next collect re-ships exactly the
+        un-acked delta (idempotent on the device: version-guarded).
+
+        ``ever_sent`` deliberately survives the rollback: an UPSTREAM ack
+        loss must not erase the fact that a row was ever shipped, or a
+        later tombstone would be suppressed (sent-gated) and the client
+        kept a ghost object with no deletion debt blocking its slot."""
+        self.dirty = True
+        self.sync = FleetSync(
+            self.sync.synced_version.at[c].set(jnp.asarray(self.acked[c])))
+        self.inflight[c].clear()
+        self.next_seq[c] = 0
+
+    def oldest_unacked_tick(self, c: int):
+        """Collect tick of the client's oldest un-acked packet (None if
+        nothing is outstanding) — the server's retransmit-timeout signal."""
+        q = self.inflight[c]
+        return q[0][1] if q else None
+
+    def deletion_debt(self, store: ObjectStore) -> np.ndarray:
+        """[C, N] bool: client c still owes an ack that covers slot n's
+        tombstone.  A slot is retirable only when NO subscriber owes it:
+        the object was ever shipped to the client (ever_sent) but its
+        acked version does not yet cover the deletion (acked < tombstone
+        version)."""
+        dele = np.asarray(deleted_mask(store))
+        ver = np.asarray(store.version)
+        return dele[None] & self.ever_sent & (self.acked < ver[None])
 
     # -- hot path ----------------------------------------------------------
     def collect(self, store: ObjectStore, *,
-                deliverable: np.ndarray | None = None) -> FleetPacket:
-        """One fleet update tick: ONE jitted dispatch for all C clients."""
+                deliverable: np.ndarray | None = None, zone: int = 0,
+                epoch: np.ndarray | None = None,
+                fresh: np.ndarray | None = None,
+                now: int | None = None) -> FleetPacket:
+        """One fleet update tick: ONE jitted dispatch for all C clients.
+
+        Every non-empty per-client packet takes the next number on that
+        client's sequence stream, and the shipped (slot, version) pairs are
+        queued in-flight until the client's cumulative ack lands — the
+        sync vector records what was SENT, ``acked`` what was CONFIRMED,
+        and slot retirement trusts only the latter."""
         mask = self.subscribed if deliverable is None \
             else self.subscribed & np.asarray(deliverable, bool)
-        batch, new_synced, nbytes, counts = _collect_fleet(
-            store, self.sync.synced_version, jnp.asarray(mask),
+        batch, new_synced, nbytes, counts, idx = _collect_fleet(
+            store, self.sync.synced_version, jnp.asarray(self.ever_sent),
+            jnp.asarray(mask),
             jnp.asarray(self.min_obs), jnp.asarray(self.user_pos),
-            self.interest_embeds, budget=self.budget,
+            self.interest_embeds, self._class_budgets, budget=self.budget,
             points_budget=self.knobs.max_object_points_client,
             knobs=self.knobs)
         self.sync = FleetSync(new_synced)
-        pkt = FleetPacket(batch=batch, counts=np.asarray(counts),
-                          nbytes=np.asarray(nbytes), tick=self.tick)
+        counts = np.asarray(counts)
+        nbytes = np.asarray(nbytes).astype(np.int64)
+        seqs = np.full((self.n_clients,), -1, np.int64)
+        if counts.any():
+            idx_h = np.asarray(idx)
+            valid_h = np.asarray(batch.valid)
+            vers_h = np.asarray(batch.version)
+            stamp = self.tick if now is None else now
+            for c in np.nonzero(counts)[0]:
+                seqs[c] = self.next_seq[c]
+                self.next_seq[c] += 1
+                v = valid_h[c]
+                self.inflight[c].append((int(seqs[c]), stamp,
+                                         idx_h[c][v], vers_h[c][v]))
+                self.ever_sent[c, idx_h[c][v]] = True
+            if self.proto:
+                nbytes[counts > 0] += PROTO_HEADER_NBYTES
+        pkt = FleetPacket(batch=batch, counts=counts, nbytes=nbytes,
+                          tick=self.tick, zone=zone, seqs=seqs,
+                          epoch=np.zeros((self.n_clients,), np.int64)
+                          if epoch is None else np.asarray(epoch, np.int64),
+                          fresh=np.zeros((self.n_clients,), bool)
+                          if fresh is None else np.asarray(fresh, bool),
+                          proto=self.proto)
         self.tick += 1
         # quiesced iff every subscriber was covered and nothing shipped
         # (a partial-coverage tick may still owe undeliverable clients)

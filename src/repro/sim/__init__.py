@@ -11,8 +11,9 @@ trajectories, network traces, fleet churn, knob schedule) driven by one
 (examples/network_drop_session.py, server.fleet.FleetSimulator are thin
 wrappers) and emits a structured, bit-replayable ``MetricsLog``.
 """
-from repro.sim.scenario import (ClientSpec, GridSpec, KnobEvent, NetTrace,
-                                ObjectEvent, PoseTrack, QueryPlan, Scenario,
-                                churn_scenario)
+from repro.core.runtime import FaultModel
+from repro.sim.scenario import (ClientSpec, CrashEvent, GridSpec, KnobEvent,
+                                NetTrace, ObjectEvent, PoseTrack, QueryPlan,
+                                Scenario, churn_scenario)
 from repro.sim.world import WorldState
 from repro.sim.engine import MetricsLog, ScenarioEngine, run_scenario

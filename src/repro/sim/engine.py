@@ -72,12 +72,16 @@ class MetricsLog:
     #                             (1/0, -1 = no query or no ground truth)
     query_ms: np.ndarray        # [T, C] f64 MODELed latency (NaN = none)
     power_w: np.ndarray         # [T, C] f64 MODELed device power
+    up_bytes: np.ndarray        # [T, C] int64 — upstream control bytes
+    #                             (acks + resync requests; hardened only)
+    faults: np.ndarray          # [T, C, 4] int32 — packets lost, duplicate
+    #                             drops, corrupt drops, resync requests
 
     _FIELDS = ("tick", "events", "gc_released", "server_live",
                "server_tombstones", "sent_bytes", "sent_tomb_bytes",
                "recv_bytes", "delivered", "delayed", "client_active",
                "client_live", "client_nbytes", "mode_sq", "queried",
-               "query_hit", "query_ms", "power_w")
+               "query_hit", "query_ms", "power_w", "up_bytes", "faults")
 
     @property
     def n_ticks(self) -> int:
@@ -127,6 +131,11 @@ class MetricsLog:
             "query_hits": int((self.query_hit == 1).sum()),
             "idle_zero_byte_ticks": int((self.sent_bytes.sum(axis=1)
                                          == 0).sum()),
+            "up_bytes_total": int(self.up_bytes.sum()),
+            "packets_lost": int(self.faults[:, :, 0].sum()),
+            "dup_drops": int(self.faults[:, :, 1].sum()),
+            "corrupt_drops": int(self.faults[:, :, 2].sum()),
+            "resync_requests": int(self.faults[:, :, 3].sum()),
         }
         approx = {
             "query_ms_mean": float(q_ms.mean()) if len(q_ms) else 0.0,
@@ -181,12 +190,15 @@ class ScenarioEngine:
         cids = [c.cid for c in sc.clients]
         assert cids == list(range(len(cids))), \
             "ClientSpec.cid must be 0..C-1 (FleetServer indexing)"
+        # hardened mode: fault-injection transport + protocol framing bytes
+        self._hardened = sc.faults is not None or bool(sc.crash_events)
         grid = ZoneGrid.for_room(sc.grid.room, sc.grid.nx, sc.grid.nz)
         if self.server is None:
             self.server = FleetServer(knobs=sc.knobs,
                                       embed_dim=sc.embed_dim,
                                       n_clients=len(sc.clients), grid=grid,
-                                      budget=sc.budget)
+                                      budget=sc.budget,
+                                      proto=self._hardened)
         if self.mapper is None and self.world is None:
             self.world = WorldState(knobs=sc.knobs, embed_dim=sc.embed_dim,
                                     seed=sc.seed)
@@ -196,7 +208,7 @@ class ScenarioEngine:
                 net=NetworkModel(rtt_ms=c.net.rtt_ms,
                                  bandwidth_mbps=c.net.bandwidth_mbps,
                                  outages=c.net.outages),
-                knobs=sc.knobs, dt=sc.tick_s)
+                knobs=sc.knobs, dt=sc.tick_s, cid=c.cid, faults=sc.faults)
             for c in sc.clients}
         self.joined = {c.cid: False for c in sc.clients}
         self._radius = {c.cid: c.subscribe_radius for c in sc.clients}
@@ -206,6 +218,10 @@ class ScenarioEngine:
         self._knob_events = defaultdict(list)
         for ev in sc.knob_events:
             self._knob_events[ev.tick].append(ev)
+        self._crashes = defaultdict(list)
+        for ev in sc.crash_events:
+            self._crashes[ev.tick].append(ev)
+        self._crashed_until = {}           # cid -> first tick back up
 
     # ------------------------------------------------------------------
     def _store(self):
@@ -246,25 +262,6 @@ class ScenarioEngine:
             removed += self.world.removed - before[2]
         return spawned, moved, removed
 
-    def _held_oids(self) -> set:
-        """Object ids any JOINED client still retains or has in a pending
-        (in-flight) packet — these tombstones must not be released yet: the
-        client has not applied the deletion (or might apply an in-flight
-        insert after the release and keep a ghost).  Clients that left for
-        good are excluded by design (zone-leave staleness, see ROADMAP)."""
-        held = set()
-        for cid, sess in self.sessions.items():
-            if not self.joined[cid]:
-                continue
-            m = sess.dev.local
-            held.update(int(x) for x in
-                        np.asarray(m.ids)[np.asarray(m.active)])
-            for _, pkt in sess.pending:
-                if pkt.count and pkt.batch is not None:
-                    held.update(int(x) for x in
-                                np.asarray(pkt.batch.oid)[:pkt.count])
-        return held
-
     def _apply_knob_events(self, i: int) -> None:
         for ev in self._knob_events.get(i, ()):
             targets = [ev.cid] if ev.cid is not None \
@@ -286,13 +283,29 @@ class ScenarioEngine:
         prev_down = np.zeros(C, np.int64)
         prev_delivered = np.zeros(C, np.int32)
         prev_delayed = np.zeros(C, np.int32)
+        prev_up = np.zeros(C, np.int64)
+        prev_faults = np.zeros((C, 4), np.int32)
         self.wall_ms = []      # measured tick wall time — NOT in MetricsLog
         #                        (wall clock would break bit-replay)
 
         for i in range(T):
             wall0 = _time.perf_counter()
             t = i * sc.tick_s
+            if i == sc.n_ticks:
+                # drain phase: the chaos is over — clean links so every
+                # retransmitted delta can land and the run converges
+                for sess in self.sessions.values():
+                    sess.faults = None
             self._apply_knob_events(i)
+            for ev in self._crashes.get(i, ()):
+                # crash: the device loses its volatile state and drops off;
+                # it rejoins (fresh epoch, full catch-up) once back up
+                self._crashed_until[ev.cid] = i + max(ev.down_ticks, 1)
+                if self.joined[ev.cid]:
+                    self.joined[ev.cid] = False
+                    self.sessions[ev.cid].crash()
+                    self.server.crash(ev.cid)
+                    self.server.leave(ev.cid)
             spawned, moved, removed = self._apply_events(i)
             if self.mapper is not None and self.frames is not None \
                     and i < len(self.frames):
@@ -300,8 +313,14 @@ class ScenarioEngine:
                                           jax.random.fold_in(key, i))
             gc_n = 0
             if self.world is not None and sc.tombstone_ttl is not None:
+                # sync-vector-driven slot retirement: a tombstone is
+                # releasable only once every subscriber's ACKED version
+                # covers the deletion (lease-capped for partitioned
+                # clients) — the server knows, no omniscient engine oracle
+                blocked = self.server.blocked_tombstone_oids(
+                    tick=i, lease_ticks=sc.lease_ticks)
                 gc_n = self.world.gc(tick=i, ttl=sc.tombstone_ttl,
-                                     protected=self._held_oids())
+                                     protected=blocked)
             store = self._store()
             self.server.refresh(store)
 
@@ -310,11 +329,12 @@ class ScenarioEngine:
             active = np.zeros(C, bool)
             for spec in sc.clients:
                 cid, sess = spec.cid, self.sessions[spec.cid]
-                in_window = spec.join_tick <= i < spec.leave_tick
+                in_window = spec.join_tick <= i < spec.leave_tick \
+                    and i >= self._crashed_until.get(cid, 0)
                 if not self.joined[cid] and in_window:
                     self.joined[cid] = True
                     self.server.join(cid, spec.track.pose_at(t),
-                                     self._radius[cid])
+                                     self._radius[cid], tick=i)
                 elif self.joined[cid] and not in_window:
                     self.joined[cid] = False
                     self.server.leave(cid)
@@ -325,7 +345,11 @@ class ScenarioEngine:
                     deliverable[cid] = sess.net.is_up(t)
                     active[cid] = True
 
-            packets = self.server.tick(deliverable)
+            if self._hardened:
+                retx = sc.faults.retx_ticks if sc.faults is not None else 3
+                self.server.maintain(tick=i, deliverable=deliverable,
+                                     retx_ticks=retx)
+            packets = self.server.tick(deliverable, tick=i)
             sent = self.server.per_client_nbytes(packets)
             from repro.core.updates import TOMBSTONE_NBYTES
             tomb_sent = np.zeros(C, np.int64)
@@ -345,6 +369,33 @@ class ScenarioEngine:
                 if m is None:
                     m = sess.step(t)
                 mode[cid] = 1 if m == "SQ" else 0
+                # prune-on-unsubscribe: entries in zones the client left
+                # are dead state it will never receive tombstones for
+                subs = self.server.subscribed[cid]
+                if not subs.all():
+                    sess.prune_zones(self.server.grid, subs)
+
+            # upstream control plane: cumulative acks + resync requests
+            # (clean link: reliable outside outages; fault transport:
+            # seeded uplink loss draws)
+            for spec in sc.clients:
+                cid, sess = spec.cid, self.sessions[spec.cid]
+                if not self.joined[cid]:
+                    sess.drain_acks(), sess.drain_ctrl()   # gone: discard
+                    continue
+                if not sess.net.is_up(t):
+                    continue            # buffered until the link is back
+                for k, (z, ep, seq) in enumerate(sess.drain_acks()):
+                    if sess.faults is not None \
+                            and sess.faults.uplink_lost(1, cid, i, k, seq):
+                        continue
+                    self.server.ack(cid, z, ep, seq, tick=i)
+                for k, (kind, z) in enumerate(sess.drain_ctrl()):
+                    if sess.faults is not None \
+                            and sess.faults.uplink_lost(2, cid, i, k, z):
+                        continue
+                    if kind == "resync":
+                        self.server.request_resync(cid)
 
             # seeded query plan
             queried = np.zeros(C, np.int8)
@@ -430,6 +481,16 @@ class ScenarioEngine:
             rec["query_hit"].append(hit.copy())
             rec["query_ms"].append(q_ms.copy())
             rec["power_w"].append(power)
+            up = np.array([self.sessions[c].up_bytes for c in range(C)],
+                          np.int64)
+            flt = np.array([[self.sessions[c].lost,
+                             self.sessions[c].dup_drops,
+                             self.sessions[c].corrupt_drops,
+                             self.sessions[c].resyncs]
+                            for c in range(C)], np.int32)
+            rec["up_bytes"].append(up - prev_up)
+            rec["faults"].append(flt - prev_faults)
+            prev_up, prev_faults = up, flt
             self.wall_ms.append((_time.perf_counter() - wall0) * 1e3)
 
         return MetricsLog(**{f: np.asarray(v) for f, v in rec.items()})

@@ -89,6 +89,18 @@ class KnobEvent:
 
 
 @dataclass(frozen=True)
+class CrashEvent:
+    """Client crash/restart: at the start of ``tick`` client ``cid`` loses
+    all volatile state (local map, in-flight packets, protocol position)
+    and stays down for ``down_ticks`` ticks, then rejoins — the server
+    hands it a fresh sync epoch and a full catch-up instead of silently
+    replaying stale per-client sync state."""
+    tick: int
+    cid: int
+    down_ticks: int = 2
+
+
+@dataclass(frozen=True)
 class QueryPlan:
     """Seeded per-tick query schedule: each active client queries with
     probability ``prob`` for a uniformly drawn live class; SQ specs carry a
@@ -123,6 +135,14 @@ class Scenario:
     #                               end with every link up (packets drain)
     tombstone_ttl: int | None = None   # release tombstones this many ticks
     #                               after removal (None = never in-run)
+    faults: object = None         # core.runtime.FaultModel — seeded packet
+    #                               loss/dup/reorder/corruption (None =
+    #                               clean legacy transport)
+    crash_events: tuple = ()      # CrashEvent, ... — client crash/restart
+    lease_ticks: int | None = None     # tombstone-retirement lease: a
+    #                               partitioned client that owes deletion
+    #                               acks forfeits its hold after this many
+    #                               ack-free ticks (fresh epoch on return)
 
     def client(self, cid: int) -> ClientSpec:
         for c in self.clients:
@@ -143,7 +163,9 @@ def churn_scenario(*, seed: int = 0, n_objects: int = 24, n_ticks: int = 24,
                    knobs: Knobs | None = None, embed_dim: int = 32,
                    grid: GridSpec = GridSpec(), n_labels: int = 12,
                    query_prob: float = 0.5,
-                   tombstone_ttl: int | None = None) -> Scenario:
+                   tombstone_ttl: int | None = None,
+                   faults: object = None, crash_events: tuple = (),
+                   lease_ticks: int | None = None) -> Scenario:
     """The canonical dynamic-scene workload, fully determined by ``seed``.
 
     * ``n_objects`` spawn up front (tick 0) plus ``spawn_late`` more spread
@@ -216,4 +238,6 @@ def churn_scenario(*, seed: int = 0, n_objects: int = 24, n_ticks: int = 24,
     return Scenario(seed=seed, n_ticks=n_ticks, embed_dim=embed_dim,
                     knobs=kn, grid=grid, clients=tuple(clients),
                     events=tuple(events), query=QueryPlan(prob=query_prob),
-                    drain_ticks=drain_ticks, tombstone_ttl=tombstone_ttl)
+                    drain_ticks=drain_ticks, tombstone_ttl=tombstone_ttl,
+                    faults=faults, crash_events=tuple(crash_events),
+                    lease_ticks=lease_ticks)

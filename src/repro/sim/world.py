@@ -119,12 +119,14 @@ class WorldState:
     # ------------------------------------------------------------------
     def gc(self, *, tick: int, ttl: int, protected=frozenset()) -> int:
         """Release tombstones older than ``ttl`` ticks AND not in
-        ``protected`` (oids some client still holds or has in flight —
-        release_tombstones' precondition is that the deletion has shipped
-        everywhere; age alone is NOT sufficient: a client offline longer
-        than the TTL would otherwise keep the ghost object forever).
-        Returns how many slots were retired; the zone mirror / sync layers
-        observe the retirement on the next refresh."""
+        ``protected`` — the oids the FleetServer reports blocked because
+        some subscriber's ACKED sync version does not yet cover the
+        deletion (`FleetServer.blocked_tombstone_oids`, lease-capped).
+        release_tombstones' precondition is that the deletion has been
+        CONFIRMED everywhere; age alone is NOT sufficient: a client
+        offline longer than the TTL would otherwise keep the ghost object
+        forever.  Returns how many slots were retired; the zone mirror /
+        sync layers observe the retirement on the next refresh."""
         ids = np.asarray(self.store.ids)
         dele = np.asarray(deleted_mask(self.store))
         slots = [s for s in np.nonzero(dele)[0]
@@ -132,6 +134,8 @@ class WorldState:
                  and int(ids[s]) not in protected]
         if slots:
             self.store = release_tombstones(self.store, slots)
+            for s in slots:
+                self.removed_at.pop(int(ids[s]), None)
         return len(slots)
 
     # ------------------------------------------------------------------

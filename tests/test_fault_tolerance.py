@@ -1,0 +1,324 @@
+"""Hostile-network protocol hardening: chaos property suite + deterministic
+regression arms.
+
+The contract under test (ISSUE 6): with the fault-injection transport
+(seeded per-packet loss / duplication / reordering / corruption, client
+crash-restart) the hardened protocol still converges — after the clean
+drain tail every client's map is CONTENT-IDENTICAL to the fault-free
+replay, device memory stays bounded, chaos runs replay bit-identically,
+and tombstoned server slots are retired exactly when every subscriber's
+ACKED sync version covers the deletion (never sooner — the slot-leak arm —
+unless the retirement lease expires a permanently partitioned client).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.knobs import Knobs
+from repro.core.local_map import (apply_update, init_local_map,
+                                  local_map_nbytes)
+from repro.core.runtime import ClientSession, DeviceClient, FaultModel, \
+    NetworkModel
+from repro.core.store import deleted_mask, init_store
+from repro.core.updates import collect_updates, init_sync
+from repro.sim import (ClientSpec, CrashEvent, NetTrace, ObjectEvent,
+                       PoseTrack, QueryPlan, Scenario)
+from repro.sim.engine import ScenarioEngine
+from repro.sim.scenario import GridSpec
+
+E = 32
+# same capacities as test_scenario_properties.py: shared jit cache
+KN = Knobs(server_capacity=32, client_capacity=16,
+           max_object_points_server=16, max_object_points_client=8,
+           min_obs_before_sync=1)
+N_TICKS = 8
+DRAIN = 8
+
+
+def _canonical_map(m) -> dict:
+    """Content view of a LocalMap keyed by oid: slot order and priority are
+    transport-dependent (admission order differs under reordering), the
+    object CONTENT must not be."""
+    act = np.asarray(m.active)
+    out = {}
+    for s in np.nonzero(act)[0]:
+        oid = int(np.asarray(m.ids)[s])
+        out[oid] = (
+            int(np.asarray(m.version)[s]),
+            int(np.asarray(m.label)[s]),
+            int(np.asarray(m.n_points)[s]),
+            np.asarray(m.centroid)[s].tobytes(),
+            np.asarray(m.embed)[s].tobytes(),
+            np.asarray(m.points)[s].tobytes(),
+        )
+    return out
+
+
+def _base_scenario(*, seed=7, n_clients=2, outage=None, faults=None,
+                   crash_events=(), lease_ticks=None, drain=DRAIN,
+                   remove_ticks=(4,), n_obj=5, ttl=2):
+    events = [ObjectEvent(tick=0, kind="spawn", oid=oid, class_id=oid % 4,
+                          pos=(0.5 * oid - 1.0, 1.0, 0.3 * oid - 0.7),
+                          n_points=4 + oid)
+              for oid in range(1, n_obj + 1)]
+    for k, tk in enumerate(remove_ticks):
+        events.append(ObjectEvent(tick=tk, kind="remove", oid=k + 1))
+    events.append(ObjectEvent(tick=3, kind="move", oid=n_obj,
+                              delta=(0.4, 0.0, -0.2)))
+    events.sort(key=lambda e: (e.tick, e.kind, e.oid))
+    clients = tuple(ClientSpec(
+        cid=c, net=NetTrace(outages=outage if (outage and c == 1) else ()),
+        track=PoseTrack(anchor=(0.0, 1.5, 0.0)), subscribe_radius=10.0)
+        for c in range(n_clients))
+    return Scenario(seed=seed, n_ticks=N_TICKS, embed_dim=E, knobs=KN,
+                    grid=GridSpec(room=8.0, nx=1, nz=1), budget=16,
+                    clients=clients, events=tuple(events),
+                    query=QueryPlan(prob=0.0), drain_ticks=drain,
+                    tombstone_ttl=ttl, faults=faults,
+                    crash_events=crash_events, lease_ticks=lease_ticks)
+
+
+# ---------------------------------------------------------------------------
+# chaos convergence: the core property, checked for one fault mix
+# ---------------------------------------------------------------------------
+def _assert_chaos_converges(seed, faults, crashes, remove_ticks):
+    """Under the given seeded loss/dup/reorder/corrupt/crash mix: after the
+    drain tail the maps match the fault-free replay object-for-object,
+    memory stays bounded, the chaos run itself replays bit-identically,
+    and no tombstone slot leaks (every deletion acked + retired)."""
+    faulty = _base_scenario(seed=seed, faults=faults, crash_events=crashes,
+                            remove_ticks=remove_ticks)
+    clean = _base_scenario(seed=seed, remove_ticks=remove_ticks)
+    eng_f = ScenarioEngine(faulty)
+    log_f = eng_f.run()
+    eng_c = ScenarioEngine(clean)
+    eng_c.run()
+
+    # bounded memory: fixed-capacity map, never over
+    assert (log_f.client_live <= KN.client_capacity).all()
+    cap_bytes = local_map_nbytes(init_local_map(KN, E))
+    assert (log_f.client_nbytes == cap_bytes).all()
+
+    # convergence: content-identical to the fault-free replay, and exactly
+    # the server's live set (removed objects gone everywhere)
+    srv_live = eng_f.world.live_ids()
+    assert srv_live == eng_c.world.live_ids()
+    for cid in eng_f.sessions:
+        got = _canonical_map(eng_f.sessions[cid].dev.local)
+        want = _canonical_map(eng_c.sessions[cid].dev.local)
+        assert got == want, f"client {cid} diverged: " \
+            f"{sorted(got)} vs {sorted(want)}"
+        assert set(got) == srv_live
+
+    # slots never leak: every tombstone was acked (or lease-free clean) and
+    # retired by the ack-driven GC before the run ended
+    assert int(np.asarray(deleted_mask(eng_f.world.store)).sum()) == 0
+
+    # chaos replay is deterministic: same Scenario -> bit-identical log
+    log_f2 = ScenarioEngine(_base_scenario(
+        seed=seed, faults=faults, crash_events=crashes,
+        remove_ticks=remove_ticks)).run()
+    assert log_f.equals(log_f2), log_f.diff(log_f2)
+    return log_f
+
+
+# fixed fault mixes: each arm stresses one failure mode hard, the last
+# mixes everything + a crash (runs with or without hypothesis installed)
+_CHAOS_ARMS = [
+    ("loss", 11, FaultModel(seed=3, loss_prob=0.3), (), (4,)),
+    ("dup", 12, FaultModel(seed=2, dup_prob=0.5), (), (3, 5)),
+    ("reorder", 13, FaultModel(seed=3, reorder_prob=0.5,
+                               reorder_jitter_s=2.5), (), (4,)),
+    ("corrupt", 14, FaultModel(seed=4, corrupt_prob=0.3), (), (5,)),
+    ("everything+crash", 15,
+     FaultModel(seed=2, loss_prob=0.15, dup_prob=0.2, reorder_prob=0.25,
+                corrupt_prob=0.1),
+     (CrashEvent(tick=4, cid=1, down_ticks=2),), (3, 6)),
+]
+
+
+@pytest.mark.parametrize("name,seed,faults,crashes,removes", _CHAOS_ARMS,
+                         ids=[a[0] for a in _CHAOS_ARMS])
+def test_chaos_converges_fixed_arms(name, seed, faults, crashes, removes):
+    log = _assert_chaos_converges(seed, faults, crashes, removes)
+    # each arm must actually exercise its fault mode (draws landed)
+    flt = log.faults.sum(axis=(0, 1))          # lost, dup, corrupt, resync
+    if faults.loss_prob:
+        assert flt[0] > 0
+    if faults.dup_prob:
+        assert flt[1] > 0
+    if faults.corrupt_prob:
+        assert flt[2] > 0
+
+
+# ---------------------------------------------------------------------------
+# chaos property suite (hypothesis; random mixes on top of the fixed arms)
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAS_HYPOTHESIS = True
+except ImportError:
+    _HAS_HYPOTHESIS = False
+
+if _HAS_HYPOTHESIS:
+    @st.composite
+    def chaos(draw):
+        faults = FaultModel(
+            seed=draw(st.integers(0, 2**16)),
+            loss_prob=draw(st.sampled_from([0.0, 0.1, 0.3])),
+            dup_prob=draw(st.sampled_from([0.0, 0.2])),
+            reorder_prob=draw(st.sampled_from([0.0, 0.3])),
+            reorder_jitter_s=2.0,
+            corrupt_prob=draw(st.sampled_from([0.0, 0.15])),
+            resync_timeout_s=2.0, retx_ticks=3)
+        crashes = ()
+        if draw(st.booleans()):
+            crashes = (CrashEvent(tick=draw(st.integers(2, N_TICKS - 1)),
+                                  cid=draw(st.integers(0, 1)),
+                                  down_ticks=2),)
+        return dict(seed=draw(st.integers(0, 2**16)), faults=faults,
+                    crashes=crashes,
+                    remove_ticks=tuple(draw(
+                        st.lists(st.integers(3, N_TICKS - 1), max_size=2))))
+
+    @settings(max_examples=8, deadline=None)
+    @given(chaos())
+    def test_chaos_converges_property(cfg):
+        _assert_chaos_converges(cfg["seed"], cfg["faults"], cfg["crashes"],
+                                cfg["remove_ticks"])
+
+
+# ---------------------------------------------------------------------------
+# deterministic arms
+# ---------------------------------------------------------------------------
+def test_partitioned_subscriber_blocks_retirement_without_lease():
+    """A permanently partitioned subscriber never acks the deletion, so the
+    tombstoned slot must NOT be released (no lease): releasing it would
+    let the client reconnect into a ghost object it can never delete."""
+    horizon = float(N_TICKS + DRAIN + 1)
+    sc = _base_scenario(outage=((3.0, horizon),), remove_ticks=(4,),
+                        lease_ticks=None)
+    eng = ScenarioEngine(sc)
+    log = eng.run()
+    # the tombstone aged far past ttl yet stays: client 1 never acked it
+    assert int(np.asarray(deleted_mask(eng.world.store)).sum()) == 1
+    assert int(log.gc_released.sum()) == 0
+    # the reachable client converged (deleted + acked), the partitioned one
+    # still holds the ghost — exactly the state the tombstone must outlive
+    m0 = _canonical_map(eng.sessions[0].dev.local)
+    m1 = _canonical_map(eng.sessions[1].dev.local)
+    assert 1 not in m0
+    assert 1 in m1
+
+
+def test_lease_expiry_retires_slot_and_forces_fresh_epoch():
+    """Same partition, but a retirement lease: after ``lease_ticks`` with
+    no acks the partitioned client forfeits its hold — the slot retires,
+    and the client is marked for a fresh epoch (full catch-up) so
+    correctness survives the forfeit."""
+    horizon = float(N_TICKS + DRAIN + 1)
+    sc = _base_scenario(outage=((3.0, horizon),), remove_ticks=(4,),
+                        lease_ticks=4)
+    eng = ScenarioEngine(sc)
+    log = eng.run()
+    assert int(np.asarray(deleted_mask(eng.world.store)).sum()) == 0
+    assert int(log.gc_released.sum()) == 1
+    # the forfeited client is flagged: its next deliverable tick restarts
+    # the session from scratch instead of trusting its stale sync state
+    assert bool(eng.server.needs_fresh[1])
+
+
+def test_crash_restart_rejoins_with_fresh_epoch():
+    """A crashed client loses its map and protocol position; the rejoin
+    bumps the epoch with fresh=True and re-ships the whole subscribed
+    store — including absorbing a removal that happened while it was
+    down (it never sees that tombstone; the fresh catch-up just omits
+    the object)."""
+    import dataclasses
+    sc = _base_scenario(n_clients=1, remove_ticks=(), ttl=None)
+    sc = dataclasses.replace(
+        sc, events=sc.events + (ObjectEvent(tick=6, kind="remove", oid=2),),
+        crash_events=(CrashEvent(tick=5, cid=0, down_ticks=2),))
+    eng = ScenarioEngine(sc)
+    log = eng.run()
+    # down window: inactive, map wiped
+    assert not log.client_active[5, 0] and not log.client_active[6, 0]
+    assert log.client_live[5, 0] == 0
+    # epoch history: initial join + crash rejoin = 2 fresh epochs
+    assert int(eng.server.epoch[0]) == 2
+    # converged post-rejoin: live set matches, removed-object ghost absent
+    got = _canonical_map(eng.sessions[0].dev.local)
+    assert set(got) == eng.world.live_ids()
+    assert 2 not in got
+
+
+def test_resync_backoff_doubles_and_caps():
+    """Gap detection: resync requests fire at the timeout, then back off
+    exponentially up to the cap (a congested server is not hammered)."""
+    fm = FaultModel(resync_timeout_s=2.0, resync_backoff_cap_s=8.0)
+    sess = ClientSession(dev=DeviceClient(knobs=KN, embed_dim=8),
+                         net=NetworkModel(), knobs=KN, dt=1.0, cid=0,
+                         faults=fm)
+    store = init_store(KN.server_capacity, 8, KN.max_object_points_server)
+    store = store._replace(
+        ids=store.ids.at[0].set(7), active=store.active.at[0].set(True),
+        n_points=store.n_points.at[0].set(4),
+        obs_count=store.obs_count.at[0].set(3),
+        version=store.version.at[0].set(1))
+    pkt, _ = collect_updates(store, init_sync(KN.server_capacity), KN,
+                             tick=0)
+    pkt.zone, pkt.seq, pkt.epoch = 0, 1, 0      # seq 0 was lost: gap
+    sess._receive(0.0, pkt)
+    assert sess.delivered == 0                  # buffered, not applied
+    fired = []
+    for t in range(1, 16):
+        sess.step(float(t))
+        for kind, _ in sess.drain_ctrl():
+            fired.append(t)
+    # timeout 2 -> backoff 4 -> 8 -> capped at 8
+    assert fired == [2, 6, 14]
+    assert sess.resyncs == 3
+
+
+def test_duplicate_packet_apply_is_byte_identical_noop():
+    """Applying the same UpdateBatch twice leaves the local map
+    byte-for-byte unchanged — the idempotence the ack machinery (dup
+    delivery, resync re-ship) leans on."""
+    store = init_store(KN.server_capacity, E, KN.max_object_points_server)
+    for s, oid in enumerate([3, 8, 11]):
+        store = store._replace(
+            ids=store.ids.at[s].set(oid),
+            active=store.active.at[s].set(True),
+            embed=store.embed.at[s].set(jnp.ones(E) / np.sqrt(float(E))),
+            n_points=store.n_points.at[s].set(6 + s),
+            obs_count=store.obs_count.at[s].set(3),
+            version=store.version.at[s].set(1 + s))
+    pkt, _ = collect_updates(store, init_sync(KN.server_capacity), KN,
+                             tick=0)
+    assert pkt.count == 3
+    dev = DeviceClient(knobs=KN, embed_dim=E)
+    up = jnp.zeros(3)
+    dev.ingest(pkt, user_pos=up)
+    once = [np.asarray(x).copy() for x in dev.local]
+    dev.ingest(pkt, user_pos=up)
+    twice = [np.asarray(x) for x in dev.local]
+    for a, b in zip(once, twice):
+        assert a.tobytes() == b.tobytes()
+
+
+def test_stale_version_update_is_dropped():
+    """Order tolerance: a row whose version is BELOW the retained entry's
+    (a reordered or replayed delivery) must not regress the map."""
+    from repro.core.local_map import ObjectUpdate
+    m = init_local_map(KN, 8)
+    mk = lambda ver, val: ObjectUpdate(        # noqa: E731
+        oid=jnp.int32(5), embed=jnp.full((8,), val, jnp.float32),
+        label=jnp.int32(1),
+        points=jnp.zeros((KN.max_object_points_client, 3), jnp.float16),
+        n_points=jnp.int32(4), centroid=jnp.zeros(3), version=jnp.int32(ver))
+    m = apply_update(m, mk(3, 0.5), jnp.float32(1.0))
+    before = [np.asarray(x).copy() for x in m]
+    m = apply_update(m, mk(2, 0.9), jnp.float32(9.0))   # stale: dropped
+    for a, b in zip(before, m):
+        assert a.tobytes() == np.asarray(b).tobytes()
+    assert int(m.version[0]) == 3

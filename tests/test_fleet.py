@@ -94,6 +94,58 @@ def test_fleet_collect_matches_single_client():
         assert shipped[c] == expect
 
 
+def test_fleet_collect_honors_class_point_overrides():
+    """Per-class point budgets (Knobs.class_point_overrides) apply inside
+    the vmapped fleet gather exactly as in the single-client path: every
+    row is clipped to its class budget and the fleet's wire-byte
+    accounting matches update_nbytes row for row."""
+    kn = Knobs(server_capacity=64, client_capacity=64,
+               max_object_points_server=64, max_object_points_client=16,
+               min_obs_before_sync=1,
+               class_point_overrides=((0, 4), (1, 8), (2, 999)))
+    store = synth_store(24, seed=13)
+    C, budget = 3, 64
+    rng = np.random.default_rng(2)
+    poses = rng.uniform(-3, 3, size=(C, 3)).astype(np.float32)
+    sm = SessionManager(knobs=kn, n_clients=C, capacity=kn.server_capacity,
+                        budget=budget, user_pos=poses.copy())
+    pkt = sm.collect(store)
+    labels = np.asarray(store.label)
+    n_src = np.asarray(store.n_points)
+    assert (pkt.counts == 24).all()
+    for c in range(C):
+        cnt = int(pkt.counts[c])
+        oids = np.asarray(pkt.batch.oid[c])[:cnt]
+        npts = np.asarray(pkt.batch.n_points[c])[:cnt]
+        slot = {int(np.asarray(store.ids)[s]): s for s in range(24)}
+        expect_bytes = 0
+        saw_override = 0
+        for o, n in zip(oids, npts):
+            s = slot[int(o)]
+            cap = kn.client_points_for(int(labels[s]))
+            cap = min(cap, kn.max_object_points_client)
+            want = min(int(n_src[s]), cap)
+            assert int(n) == want, f"oid {o} class {labels[s]}"
+            expect_bytes += update_nbytes(E, want)
+            saw_override += int(labels[s]) in (0, 1)
+        assert saw_override > 0             # the override classes occurred
+        assert int(pkt.nbytes[c]) == expect_bytes
+        # byte-for-byte vs the single-client collector under the same knobs
+        pri = np.asarray(compute_priority(
+            store.embed, store.label, store.centroid,
+            user_pos=jnp.asarray(poses[c]), knobs=kn))
+        single, _ = collect_updates(
+            store, init_sync(kn.server_capacity), kn, tick=0,
+            priorities=pri, max_updates=budget)
+        assert single.nbytes == int(pkt.nbytes[c])
+        for u in single.updates:
+            i = int(np.nonzero(oids == int(u.oid))[0][0])
+            assert int(npts[i]) == int(u.n_points)
+            np.testing.assert_array_equal(
+                np.asarray(pkt.batch.points[c, i, :int(u.n_points)]),
+                np.asarray(u.points[:int(u.n_points)]))
+
+
 def test_fleet_sync_advances_only_when_deliverable():
     """A client in outage keeps its sync row; reconnection coalesces every
     missed change into one packet (flush_buffer semantics, fleet-wide)."""

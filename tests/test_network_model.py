@@ -47,6 +47,25 @@ def test_back_to_back_outages_accumulate():
     assert np.isclose(net.delivery_time(3.5, 1000), 10.1)
 
 
+def test_nested_outage_window_is_not_double_counted():
+    net = _net(outages=((4.0, 8.0), (5.0, 6.0)))
+    # (5, 6) lies entirely inside (4, 8): the stall is still just [4, 8].
+    # sent 3.5 -> 0.5 s before the outage, 0.6 s after 8.0 -> 8.6
+    assert np.isclose(net.delivery_time(3.5, 1000), 8.6)
+    # and a send inside the nested window reports link-down, not a crash
+    assert net.delivery_time(5.5, 1000) is None
+
+
+def test_three_window_walk_accumulates_each_gap():
+    net = _net(outages=((4.0, 8.0), (8.0, 10.0), (10.5, 11.0)))
+    # sent 3.5: 0.5 s progress, stall 4->8 abuts 8->10 (resume at 10.0),
+    # 0.5 s progress in (10.0, 10.5), final 0.1 s after 11.0 -> 11.1
+    assert np.isclose(net.delivery_time(3.5, 1000), 11.1)
+    # the same windows, progress starting between them: sent 10.0 needs
+    # 0.555 s; 0.5 s fits before (10.5, 11.0), remainder lands 11.055
+    assert np.isclose(net.delivery_time(10.0, 455), 11.055)
+
+
 def test_delivery_is_fifo_per_link():
     """A packet sent while an older one is still in flight queues behind it
     — a newer-version update can never be overtaken and then overwritten
