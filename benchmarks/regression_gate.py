@@ -1,0 +1,256 @@
+"""Perf-trajectory regression gate over the BENCH_* artifacts.
+
+Compares the current ``BENCH_<suite>[_smoke].json`` files against a
+baseline (the committed copy at a git ref, falling back to the latest
+``BENCH_history/`` entry) using per-suite declarative tolerances:
+
+- ``latency``        — wall-clock metric; fails when current exceeds
+                       baseline by more than the tolerance ratio.
+                       Generous by default: CI machines are noisy.
+- ``exact``          — deterministic replay output (byte counts, query
+                       counts); any drift is a contract break, not noise.
+- ``invariant_true`` — boolean acceptance flag that must stay true.
+- ``quality``        — accuracy metric; fails when current drops more
+                       than the tolerance ratio below baseline.
+
+CLI (nonzero exit on any FAIL, for CI)::
+
+    python benchmarks/regression_gate.py --smoke --dashboard BENCH_gate.md
+"""
+import argparse
+import fnmatch
+import json
+import subprocess
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+
+@dataclass(frozen=True)
+class Check:
+    pattern: str        # fnmatch over dot-joined key paths
+    kind: str           # latency | exact | invariant_true | quality
+    tol: float = 0.0    # ratio, for latency/quality
+
+
+# Wall-clock tolerance is deliberately loose (50%): the gate exists to
+# catch order-of-magnitude regressions (a lost fusion, an accidental
+# sync), not 10% scheduler jitter on shared CI runners.
+LAT = 0.5
+
+SPECS = {
+    "scenario_suite": [
+        Check("*replay_bit_identical", "invariant_true"),
+        Check("*converged", "invariant_true"),
+        Check("*tick_ms_mean", "latency", LAT),
+        Check("*sent_bytes_total", "exact"),
+        Check("*tombstone_bytes", "exact"),
+        Check("*sq_queries", "exact"),
+        Check("*lq_queries", "exact"),
+    ],
+    "fault_tolerance": [
+        Check("*.converged", "invariant_true"),
+        Check("*.down_bytes", "exact"),
+        Check("*.up_bytes", "exact"),
+        Check("*.resync_requests", "exact"),
+        Check("*.tick_ms_mean", "latency", LAT),
+    ],
+    "query_engine": [
+        Check("*.full_mix", "latency", LAT),
+        Check("*.embed_only", "latency", LAT),
+        Check("*.batched16_per_query", "latency", LAT),
+        Check("fused_within_1_2x", "invariant_true"),
+        Check("sub_100ms_at_10k", "invariant_true"),
+    ],
+    "fleet_scale": [
+        Check("sweep.*.tick_ms", "latency", LAT),
+        Check("sweep.*.per_client_bytes", "exact"),
+    ],
+    "tab4_fig3_mapping": [
+        Check("*.total_ms", "latency", LAT),
+        Check("*.stage_ms.*", "latency", LAT),
+        Check("*.mAcc", "quality", 0.05),
+        Check("*.n_mapped", "exact"),
+    ],
+    "ingest_tick": [
+        Check("collect_ms", "latency", LAT),
+        Check("ingest_batched_ms", "latency", LAT),
+        Check("packet_bytes", "exact"),
+    ],
+}
+
+
+# ---------------------------------------------------------------- helpers
+def flatten(obj, prefix=""):
+    """Dict tree -> {dot.path: leaf} for pattern matching."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            p = f"{prefix}.{k}" if prefix else str(k)
+            out.update(flatten(v, p))
+    else:
+        out[prefix] = obj
+    return out
+
+
+def compare_suite(checks, baseline, current):
+    """Run every check over every matching key path.
+
+    Returns a list of row dicts: suite-agnostic, ready for the dashboard.
+    A pattern that matches nothing yields a single SKIP row so silent
+    spec/artifact drift is visible.
+    """
+    base, cur = flatten(baseline), flatten(current)
+    rows = []
+    for ck in checks:
+        keys = sorted(k for k in cur if fnmatch.fnmatch(k, ck.pattern))
+        if not keys:
+            rows.append(dict(metric=ck.pattern, kind=ck.kind,
+                             baseline=None, current=None,
+                             status="SKIP", detail="pattern matched nothing"))
+            continue
+        for k in keys:
+            c = cur[k]
+            b = base.get(k)
+            row = dict(metric=k, kind=ck.kind, baseline=b, current=c)
+            if ck.kind == "invariant_true":
+                ok = bool(c) is True
+                row.update(status="PASS" if ok else "FAIL",
+                           detail="" if ok else "invariant is false")
+            elif b is None:
+                row.update(status="SKIP", detail="no baseline value")
+            elif ck.kind == "exact":
+                ok = c == b
+                row.update(status="PASS" if ok else "FAIL",
+                           detail="" if ok else f"{b!r} -> {c!r}")
+            elif ck.kind == "latency":
+                limit = float(b) * (1.0 + ck.tol)
+                ok = float(c) <= limit or float(c) - float(b) < 1e-9
+                row.update(status="PASS" if ok else "FAIL",
+                           detail="" if ok else
+                           f"{float(c):.3f} > {float(b):.3f}*{1 + ck.tol:g}")
+            elif ck.kind == "quality":
+                floor = float(b) * (1.0 - ck.tol)
+                ok = float(c) >= floor
+                row.update(status="PASS" if ok else "FAIL",
+                           detail="" if ok else
+                           f"{float(c):.3f} < {float(b):.3f}*{1 - ck.tol:g}")
+            else:
+                row.update(status="SKIP", detail=f"unknown kind {ck.kind}")
+            rows.append(row)
+    return rows
+
+
+def load_baseline(suite, *, smoke, ref="HEAD", root=None, history_dir=None):
+    """Committed artifact at ``ref`` (benchmark runs overwrite the working
+    tree copy, so the git object is the true pre-run baseline), else the
+    newest BENCH_history entry, else None."""
+    root = Path(root) if root is not None else ROOT
+    name = f"BENCH_{suite}{'_smoke' if smoke else ''}.json"
+    try:
+        blob = subprocess.run(
+            ["git", "-C", str(root), "show", f"{ref}:{name}"],
+            capture_output=True, text=True, check=True).stdout
+        return json.loads(blob), f"git:{ref}:{name}"
+    except (subprocess.CalledProcessError, FileNotFoundError,
+            json.JSONDecodeError):
+        pass
+    from repro.obs.trajectory import latest_run
+    entry = latest_run(suite, smoke=smoke, history_dir=history_dir)
+    if entry is not None:
+        return entry["result"], f"history:{entry.get('git_sha')}"
+    return None, None
+
+
+def load_current(suite, *, smoke, root=None):
+    root = Path(root) if root is not None else ROOT
+    p = root / f"BENCH_{suite}{'_smoke' if smoke else ''}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def run_gate(suites=None, *, smoke=False, ref="HEAD", root=None,
+             history_dir=None):
+    """Gate every requested suite; returns (all_rows, n_fail)."""
+    all_rows = []
+    n_fail = 0
+    for suite in (suites or SPECS):
+        checks = SPECS.get(suite)
+        if checks is None:
+            all_rows.append((suite, None, [dict(
+                metric="-", kind="-", baseline=None, current=None,
+                status="SKIP", detail="no spec for suite")]))
+            continue
+        current = load_current(suite, smoke=smoke, root=root)
+        if current is None:
+            all_rows.append((suite, None, [dict(
+                metric="-", kind="-", baseline=None, current=None,
+                status="SKIP", detail="no current artifact")]))
+            continue
+        baseline, src = load_baseline(suite, smoke=smoke, ref=ref,
+                                      root=root, history_dir=history_dir)
+        if baseline is None:
+            all_rows.append((suite, None, [dict(
+                metric="-", kind="-", baseline=None, current=None,
+                status="SKIP", detail="no baseline found")]))
+            continue
+        rows = compare_suite(checks, baseline, current)
+        n_fail += sum(r["status"] == "FAIL" for r in rows)
+        all_rows.append((suite, src, rows))
+    return all_rows, n_fail
+
+
+def _fmt(v):
+    if isinstance(v, bool) or v is None:
+        return str(v)
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def dashboard_md(all_rows, *, smoke):
+    lines = [f"# BENCH regression gate ({'smoke' if smoke else 'full'})", ""]
+    for suite, src, rows in all_rows:
+        n_fail = sum(r["status"] == "FAIL" for r in rows)
+        verdict = "FAIL" if n_fail else "ok"
+        lines += [f"## {suite} — {verdict}"
+                  + (f"  (baseline: `{src}`)" if src else ""), "",
+                  "| metric | kind | baseline | current | status | detail |",
+                  "|---|---|---|---|---|---|"]
+        for r in rows:
+            lines.append(
+                f"| {r['metric']} | {r['kind']} | {_fmt(r['baseline'])} "
+                f"| {_fmt(r['current'])} | {r['status']} | {r['detail']} |")
+        lines.append("")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--suite", action="append", default=None,
+                    help="gate one suite (repeatable; default: all specs)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="gate the *_smoke artifacts")
+    ap.add_argument("--ref", default="HEAD",
+                    help="git ref holding the baseline artifacts")
+    ap.add_argument("--dashboard", default=None,
+                    help="write a markdown dashboard to this path")
+    args = ap.parse_args(argv)
+    all_rows, n_fail = run_gate(args.suite, smoke=args.smoke, ref=args.ref)
+    md = dashboard_md(all_rows, smoke=args.smoke)
+    if args.dashboard:
+        Path(args.dashboard).write_text(md)
+    for suite, src, rows in all_rows:
+        for r in rows:
+            if r["status"] != "PASS":
+                print(f"{suite}: {r['status']} {r['metric']} {r['detail']}")
+    print(f"regression gate: {n_fail} failure(s)")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -63,6 +63,11 @@ def main() -> None:
                     help="tiny shapes for CI smoke (suites that support it)")
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_<suite>.json at the repo root")
+    ap.add_argument("--git-sha", default=None,
+                    help="commit sha stamped into BENCH_history entries "
+                         "(caller-supplied; not sampled in-process)")
+    ap.add_argument("--date", default=None,
+                    help="ISO date stamped into BENCH_history entries")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for name, fn in SUITES.items():
@@ -83,8 +88,15 @@ def main() -> None:
             # full-shape perf trajectory with tiny-shape numbers
             suffix = "_smoke" if kw.get("smoke") else ""
             out = ROOT / f"BENCH_{name}{suffix}.json"
-            out.write_text(json.dumps(_jsonable(result), indent=2) + "\n")
+            payload = _jsonable(result)
+            out.write_text(json.dumps(payload, indent=2) + "\n")
             print(f"# wrote {out}")
+            # root file stays "latest"; history keeps the trajectory
+            from repro.obs.trajectory import append_run
+            hist = append_run(name, payload,
+                              git_sha=args.git_sha, date=args.date,
+                              smoke=bool(kw.get("smoke")))
+            print(f"# appended {hist}")
 
 
 if __name__ == '__main__':

@@ -61,6 +61,30 @@ def _run_one(name: str, **kw) -> dict:
     return out
 
 
+def _obs_overhead(kw, reps: int = 3) -> tuple:
+    """Median tick wall time with observability off vs on (tracer +
+    registry installed), best-of-``reps`` each.  Best-of-medians makes
+    the ratio robust to scheduler noise; the first run warms jit caches
+    so compile time never lands in either arm."""
+    from repro.obs import MetricsRegistry, Tracer, set_registry, set_tracer
+    sc = churn_scenario(**kw)
+
+    def median_tick_ms():
+        eng = ScenarioEngine(sc)
+        eng.run()
+        return float(np.median(eng.wall_ms))
+
+    median_tick_ms()                          # warm-up, discarded
+    off = min(median_tick_ms() for _ in range(reps))
+    prev_tr = set_tracer(Tracer())
+    prev_reg = set_registry(MetricsRegistry())
+    try:
+        on = min(median_tick_ms() for _ in range(reps))
+    finally:
+        set_tracer(prev_tr), set_registry(prev_reg)
+    return off, on
+
+
 def run(full: bool = False, smoke: bool = False):
     if smoke:
         sizes = {"smoke": dict(seed=23, n_objects=12, n_ticks=10,
@@ -87,7 +111,18 @@ def run(full: bool = False, smoke: bool = False):
         assert r["replay_bit_identical"], "nondeterministic replay!"
         assert r["converged"], "clients did not converge!"
     if smoke:
-        return results["smoke"]
+        out = results["smoke"]
+        # acceptance: observability must cost <5% of tick wall time
+        off, on = _obs_overhead(sizes["smoke"])
+        pct = 100.0 * (on - off) / max(off, 1e-9)
+        out["obs_tick_ms_off"] = off
+        out["obs_tick_ms_on"] = on
+        out["obs_overhead_pct"] = pct
+        csv_row("scenario[obs_overhead]", on * 1e3,
+                f"off_ms={off:.3f};overhead_pct={pct:.2f}")
+        assert pct < 5.0, \
+            f"observability overhead {pct:.2f}% >= 5% budget"
+        return out
     return results
 
 

@@ -1,0 +1,46 @@
+"""Run the golden churn scenario with observability attached and dump the
+Chrome trace (chrome://tracing / Perfetto) plus the metrics snapshot —
+the CI artifacts for eyeballing where a tick's wall time went.
+
+    PYTHONPATH=src python benchmarks/trace_golden.py \
+        [--trace BENCH_trace.json] [--metrics BENCH_metrics.json]
+"""
+import argparse
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.obs import (MetricsRegistry, Tracer, set_registry,  # noqa: E402
+                       set_tracer)
+from repro.sim import churn_scenario, run_scenario  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace", default="BENCH_trace.json")
+    ap.add_argument("--metrics", default="BENCH_metrics.json")
+    ap.add_argument("--fenced", action="store_true",
+                    help="block on fenced pytrees for honest span cost "
+                         "attribution (adds syncs)")
+    args = ap.parse_args()
+    tr, reg = Tracer(fenced=args.fenced), MetricsRegistry()
+    set_tracer(tr), set_registry(reg)
+    try:
+        # the tier-1 golden workload (tests/golden/regen.py)
+        log = run_scenario(churn_scenario(
+            seed=23, n_objects=20, n_ticks=20, n_clients=3,
+            remove_frac=0.25, drain_ticks=8))
+    finally:
+        set_tracer(None), set_registry(None)
+    tr.save(args.trace)
+    reg.save(args.metrics)
+    wall = log.summary().get("wall", {})
+    print(f"wrote {args.trace} ({len(tr)} spans) and {args.metrics}")
+    print(f"tick wall ms: p50={wall.get('p50', 0):.2f} "
+          f"p95={wall.get('p95', 0):.2f} p99={wall.get('p99', 0):.2f}")
+
+
+if __name__ == "__main__":
+    main()

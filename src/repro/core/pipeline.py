@@ -42,6 +42,8 @@ from repro.core.knobs import Knobs
 from repro.core.store import ObjectStore, store_from_knobs
 from repro.data.scenes import Frame
 from repro.kernels import ops
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import span as obs_span
 from repro.perception.embedder import OracleEmbedder
 
 LIFT_BUFFER = 4096   # uncapped per-object buffer (baseline mode)
@@ -59,6 +61,19 @@ class StageTimes:
     def total_ms(self):
         return (self.detect_ms + self.embed_ms + self.lift_ms +
                 self.associate_ms + self.ingest_ms)
+
+    def record(self, mode: str) -> None:
+        """Feed the per-stage wall times into the process-wide metrics
+        registry (no-op when none is installed)."""
+        reg = obs_metrics.get_registry()
+        if reg is None:
+            return
+        h = reg.histogram("mapping_stage_ms",
+                          "per-keyframe mapping stage wall time (ms)")
+        for stage in ("detect", "embed", "lift", "associate", "ingest"):
+            v = getattr(self, f"{stage}_ms")
+            if v > 0.0:
+                h.observe(v, stage=stage, mode=mode)
 
 
 @dataclass
@@ -170,6 +185,7 @@ class MappingServer:
         nd = len(cids_np)
         if nd == 0:
             self.frame_count += 1
+            times.record(self.mode)
             return times
 
         depth_lo = jnp.asarray(depth_mod.downsample_depth(frame.depth, r))
@@ -183,13 +199,17 @@ class MappingServer:
         # --- production path: ONE dispatch from masks to pruned store
         if self.mode == "semanticxr" and not self.instrument:
             t0 = time.perf_counter()
-            self.store = self._ingest(self.store, depth_lo,
-                                      jnp.asarray(pad_m), intr, pose, pad_c,
-                                      valid, key,
-                                      jnp.asarray(self.frame_count))
+            with obs_span("pipeline.ingest_frame", cat="ingest",
+                          nd=nd) as sp:
+                self.store = self._ingest(self.store, depth_lo,
+                                          jnp.asarray(pad_m), intr, pose,
+                                          pad_c, valid, key,
+                                          jnp.asarray(self.frame_count))
+                sp.fence(self.store.active)
             jax.block_until_ready(self.store.active)
             times.ingest_ms = (time.perf_counter() - t0) * 1e3
             self.frame_count += 1
+            times.record(self.mode)
             return times
 
         # --- staged execution (B / B+P arms, and instrumented SD)
@@ -248,4 +268,5 @@ class MappingServer:
         times.associate_ms = (time.perf_counter() - t0) * 1e3
 
         self.frame_count += 1
+        times.record(self.mode)
         return times

@@ -54,6 +54,7 @@ import jax.numpy as jnp
 
 from repro.core.local_map import LocalMap
 from repro.core.store import ObjectStore
+from repro.obs.trace import span as obs_span
 
 NEG = -1e30          # kernel-side mask value (see kernels/query_topk.py)
 
@@ -353,6 +354,13 @@ class CompiledQuery:
     shards: tuple | None = None        # zone ids (sharded targets only)
 
     def __call__(self, target, spec: Query | None = None) -> QueryResult:
+        with obs_span("query.dispatch", cat="query",
+                      sharded=_is_sharded(target)) as sp:
+            res = self._run(target, spec)
+            sp.fence(res.scores)
+        return res
+
+    def _run(self, target, spec: Query | None = None) -> QueryResult:
         spec = self.spec if spec is None else spec
         if not _is_sharded(target):
             return _execute(spec, _columns(target),

@@ -33,6 +33,8 @@ from repro.core.local_map import (LocalMap, apply_update, apply_updates_batch,
 from repro.core.store import ObjectStore
 from repro.core.updates import (ACK_NBYTES, RESYNC_NBYTES, SyncState,
                                 collect_updates, init_sync)
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import traced as obs_traced
 
 
 # ---------------------------------------------------------------------------
@@ -369,6 +371,19 @@ class ClientSession:
                         interest_embeds=self.interest_embeds)
         self.down_bytes += packet.nbytes
         self.delivered += 1
+        reg = obs_metrics.get_registry()
+        if reg is not None:
+            reg.counter("client_down_bytes_total",
+                        "bytes ingested per client").inc(packet.nbytes,
+                                                         client=self.cid)
+
+    def _count_fault(self, kind: str) -> None:
+        """Mirror a transport fault counter into the metrics registry."""
+        reg = obs_metrics.get_registry()
+        if reg is not None:
+            reg.counter("client_faults_total",
+                        "transport faults per client by kind").inc(
+                            client=self.cid, kind=kind)
 
     # -- hardened receive path ---------------------------------------------
     def _adopt_epoch(self, epoch: int, fresh: bool) -> None:
@@ -390,6 +405,11 @@ class ClientSession:
         self.acks.append((zone, self.epoch, seq))
         if self.faults is not None:
             self.up_bytes += ACK_NBYTES
+            reg = obs_metrics.get_registry()
+            if reg is not None:
+                reg.counter("client_up_bytes_total",
+                            "upstream control bytes per client").inc(
+                                ACK_NBYTES, client=self.cid, kind="ack")
 
     def _receive(self, t: float, packet) -> None:
         """Apply one arrived packet through the protocol state machine.
@@ -400,6 +420,7 @@ class ClientSession:
             return
         if not packet.checksum_ok():
             self.corrupt_drops += 1
+            self._count_fault("corrupt_drop")
             return
         if packet.epoch < self.epoch:
             return                         # pre-resync straggler: discard
@@ -411,6 +432,7 @@ class ClientSession:
             # duplicate of an applied packet; re-ack in case the original
             # cumulative ack was lost upstream
             self.dup_drops += 1
+            self._count_fault("dup_drop")
             self._ack(z, exp - 1)
             return
         if packet.seq > exp:
@@ -419,6 +441,7 @@ class ClientSession:
                 buf[packet.seq] = packet
             else:
                 self.dup_drops += 1
+                self._count_fault("dup_drop")
             self._gap_since.setdefault(z, t)
             return
         # in order: apply, then drain whatever the gap was holding back
@@ -459,6 +482,7 @@ class ClientSession:
         for k in range(copies):
             if r[1 + k] < fm.loss_prob:
                 self.lost += 1
+                self._count_fault("lost")
                 continue
             at = self._clean_delivery_at(t, packet.nbytes)
             if r[3 + k] < fm.reorder_prob:
@@ -482,6 +506,13 @@ class ClientSession:
                 self.ctrl.append(("resync", z))
                 self.resyncs += 1
                 self.up_bytes += RESYNC_NBYTES
+                self._count_fault("resync")
+                reg = obs_metrics.get_registry()
+                if reg is not None:
+                    reg.counter("client_up_bytes_total",
+                                "upstream control bytes per client").inc(
+                                    RESYNC_NBYTES, client=self.cid,
+                                    kind="resync")
                 self._gap_since[z] = t
                 self._backoff[z] = min(wait * 2, fm.resync_backoff_cap_s)
 
@@ -529,6 +560,7 @@ class ClientSession:
         self._backoff = {}
 
     # -- the per-tick step -------------------------------------------------
+    @obs_traced("client.step", cat="client")
     def step(self, t: float, packet=None) -> str:
         """Advance to time ``t``: deliver matured in-flight packets, send
         ``packet`` (ingesting within the tick unless an outage delays it),

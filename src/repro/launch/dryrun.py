@@ -69,16 +69,16 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
            "multi_pod": multi_pod, "mla_absorb": bool(absorb_mla and cfg.mla),
            "prune_tiles": prune_tiles, "seq_parallel": seq_parallel,
            "grad_accum": grad_accum, "int8_kv": int8_kv}
-    t0 = time.time()
+    t0 = time.perf_counter()
     with jax.set_mesh(mesh):
         step, args = build_step(cfg, mesh, cell)
         if cell.kind == "decode":
             lowered = step.lower(*args)
         else:
             lowered = step.lower(*args)
-        t1 = time.time()
+        t1 = time.perf_counter()
         compiled = lowered.compile()
-        t2 = time.time()
+        t2 = time.perf_counter()
 
     ma = compiled.memory_analysis()
     rec["memory"] = {

@@ -73,17 +73,17 @@ def main(argv=None):
 
     it = tok.batch_iterator(args.batch, args.seq, seed=start,
                             vocab_size=cfg.vocab_size)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range(start + 1, args.steps + 1):
         batch = {k: jnp.asarray(v) for k, v in next(it).items()}
         params, opt, ef, m = train_step(params, opt, ef, batch)
         if step % args.log_every == 0 or step == args.steps:
             tok_s = args.batch * args.seq * args.log_every / \
-                max(time.time() - t0, 1e-9)
+                max(time.perf_counter() - t0, 1e-9)
             print(f"step {step:5d} loss {float(m['loss']):.4f} "
                   f"ce {float(m['ce']):.4f} gnorm {float(m['grad_norm']):.2f} "
                   f"lr {float(m['lr']):.2e} tok/s {tok_s:.0f}")
-            t0 = time.time()
+            t0 = time.perf_counter()
         if args.ckpt_every and step % args.ckpt_every == 0:
             ckpt_mod.save(ckpt_dir, step, params)
             ckpt_mod.save(Path(ckpt_dir) / "opt", step, opt)

@@ -29,6 +29,8 @@ from repro.core.knobs import Knobs
 from repro.core.query import Query, QueryResult, compile_query
 from repro.core.runtime import ClientSession, NetworkModel
 from repro.core.store import ObjectStore
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import span as obs_span
 from repro.server.session import FleetPacket, SessionManager
 from repro.server.zones import ZoneGrid, ZoneShardedStore
 
@@ -158,15 +160,30 @@ class FleetServer:
         zone session.  Acks from a superseded epoch are dropped — their seq
         numbering no longer matches the stream."""
         if epoch != int(self.epoch[c]):
+            reg = obs_metrics.get_registry()
+            if reg is not None:
+                reg.counter("fleet_stale_acks_total",
+                            "acks dropped for a superseded epoch").inc(
+                                client=int(c))
             return
         self.epoch_fresh[c] = False    # client adopted: later packets cont
         self.last_ack_tick[c] = tick
         self.sessions[zone].ack(c, seq)
+        reg = obs_metrics.get_registry()
+        if reg is not None:
+            reg.counter("fleet_acks_total",
+                        "cumulative acks applied").inc(client=int(c),
+                                                       zone=int(zone))
 
     def request_resync(self, c: int):
         """Client detected an unrecoverable gap: roll it back to its acked
         state under a bumped epoch (its reorder buffers restart too)."""
-        self._bump_epoch(c, fresh=False)
+        with obs_span("fleet.resync", cat="sync", client=int(c)):
+            self._bump_epoch(c, fresh=False)
+        reg = obs_metrics.get_registry()
+        if reg is not None:
+            reg.counter("fleet_resyncs_total",
+                        "server-side resync rollbacks").inc(client=int(c))
 
     def maintain(self, *, tick: int, deliverable: np.ndarray,
                  retx_ticks: int):
@@ -234,13 +251,24 @@ class FleetServer:
                 else tick
             self.needs_fresh[c] = False
         out = []
-        for z, sess in enumerate(self.sessions):
-            if not sess.dirty or not (sess.subscribed & deliverable).any():
-                continue
-            out.append((z, sess.collect(self.zoned.zones[z],
-                                        deliverable=deliverable, zone=z,
-                                        epoch=self.epoch,
-                                        fresh=self.epoch_fresh, now=tick)))
+        with obs_span("fleet.tick", cat="sync") as sp:
+            for z, sess in enumerate(self.sessions):
+                if not sess.dirty or not (sess.subscribed
+                                          & deliverable).any():
+                    continue
+                out.append((z, sess.collect(self.zoned.zones[z],
+                                            deliverable=deliverable, zone=z,
+                                            epoch=self.epoch,
+                                            fresh=self.epoch_fresh,
+                                            now=tick)))
+            sp.set(zones_collected=len(out))
+        reg = obs_metrics.get_registry()
+        if reg is not None and out:
+            cnt = reg.counter("fleet_sent_bytes_total",
+                              "downstream wire bytes by client/zone")
+            for z, pkt in out:
+                for c in np.nonzero(pkt.nbytes)[0]:
+                    cnt.inc(int(pkt.nbytes[c]), client=int(c), zone=int(z))
         return out
 
     def per_client_nbytes(self, packets: list) -> np.ndarray:

@@ -36,6 +36,7 @@ from repro.core import geometry as geo
 from repro.core.knobs import Knobs
 from repro.core.local_map import UpdateBatch, compute_priority
 from repro.core.store import ObjectStore, deleted_mask
+from repro.obs.trace import span as obs_span
 from repro.core.updates import (_HEADER_B, PROTO_HEADER_NBYTES,
                                 TOMBSTONE_NBYTES, UpdatePacket,
                                 class_budget_table)
@@ -373,13 +374,15 @@ class SessionManager:
         and slot retirement trusts only the latter."""
         mask = self.subscribed if deliverable is None \
             else self.subscribed & np.asarray(deliverable, bool)
-        batch, new_synced, nbytes, counts, idx = _collect_fleet(
-            store, self.sync.synced_version, jnp.asarray(self.ever_sent),
-            jnp.asarray(mask),
-            jnp.asarray(self.min_obs), jnp.asarray(self.user_pos),
-            self.interest_embeds, self._class_budgets, budget=self.budget,
-            points_budget=self.knobs.max_object_points_client,
-            knobs=self.knobs)
+        with obs_span("session.collect_fleet", cat="sync", zone=zone) as sp:
+            batch, new_synced, nbytes, counts, idx = _collect_fleet(
+                store, self.sync.synced_version, jnp.asarray(self.ever_sent),
+                jnp.asarray(mask),
+                jnp.asarray(self.min_obs), jnp.asarray(self.user_pos),
+                self.interest_embeds, self._class_budgets, budget=self.budget,
+                points_budget=self.knobs.max_object_points_client,
+                knobs=self.knobs)
+            sp.fence(batch.valid)
         self.sync = FleetSync(new_synced)
         counts = np.asarray(counts)
         nbytes = np.asarray(nbytes).astype(np.int64)

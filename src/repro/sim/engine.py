@@ -18,8 +18,10 @@ EXPERIMENTS.md), never measurements.
 """
 from __future__ import annotations
 
+import json
 from collections import defaultdict
 from dataclasses import dataclass, field
+from pathlib import Path
 
 import numpy as np
 import jax
@@ -29,17 +31,52 @@ from repro.core.local_map import local_map_nbytes
 from repro.core.query import Query
 from repro.core.runtime import (ClientSession, DeviceClient, NetworkModel,
                                 PowerModel)
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import span as obs_span
 from repro.server.fleet import FleetServer
 from repro.server.zones import ZoneGrid
 from repro.sim.scenario import Scenario
 from repro.sim.world import WorldState
 
-# modeled on-device query cost (ms): the measured fused local-query
-# dispatch at paper shapes (BENCH_query_engine.json full_mix) — a MODEL
-# constant so replays are deterministic
+# modeled on-device query cost (ms): FALLBACK only — the engine derives the
+# LQ latency MODEL from the measured BENCH_query_engine.json full_mix curve
+# interpolated at the client's actual map size (see lq_model_ms); this
+# constant applies only when no measured curve is on disk
 LQ_MODEL_MS = 3.5
+_LQ_CURVE_PATH = (Path(__file__).resolve().parents[3]
+                  / "BENCH_query_engine.json")
 # SQ wire model: fp16 query embedding up, k result rows (id+score+slot) down
 _SQ_ROW_B = 16
+
+
+def load_lq_curve(path=None):
+    """(sizes [K], full_mix ms [K]) from a committed BENCH_query_engine.json
+    — the measured declarative-engine latency curve — or None when the file
+    is missing/unparseable (callers fall back to ``LQ_MODEL_MS``)."""
+    try:
+        data = json.loads(Path(path or _LQ_CURVE_PATH).read_text())
+    except (OSError, ValueError):
+        return None
+    pts = sorted((int(k), float(v["full_mix"])) for k, v in data.items()
+                 if isinstance(v, dict) and str(k).isdigit()
+                 and "full_mix" in v)
+    if not pts:
+        return None
+    return (np.asarray([p[0] for p in pts], np.float64),
+            np.asarray([p[1] for p in pts], np.float64))
+
+
+def lq_model_ms(n_objects: int, curve=None) -> float:
+    """Modeled on-device (LQ) query latency at the client's actual map
+    size: log-size linear interpolation over the measured full_mix curve,
+    clamped to the measured range.  Still a MODEL — the interpolant is a
+    pure function of (committed curve file, object count), so replays stay
+    bit-deterministic; no curve -> the legacy ``LQ_MODEL_MS`` constant."""
+    if curve is None:
+        return LQ_MODEL_MS
+    ns, ms = curve
+    n = min(max(float(max(n_objects, 1)), float(ns[0])), float(ns[-1]))
+    return float(np.interp(np.log(n), np.log(ns), ms))
 
 
 @dataclass
@@ -76,6 +113,10 @@ class MetricsLog:
     #                             (acks + resync requests; hardened only)
     faults: np.ndarray          # [T, C, 4] int32 — packets lost, duplicate
     #                             drops, corrupt drops, resync requests
+    wall_ms: list = None        # [T] measured tick wall time — NOT part of
+    #                             the determinism contract: excluded from
+    #                             _FIELDS/equals, surfaced only in the
+    #                             summary's ``wall`` section
 
     _FIELDS = ("tick", "events", "gc_released", "server_live",
                "server_tombstones", "sent_bytes", "sent_tomb_bytes",
@@ -142,7 +183,12 @@ class MetricsLog:
             "query_ms_max": float(q_ms.max()) if len(q_ms) else 0.0,
             "power_w_mean": float(self.power_w.mean()),
         }
-        return {"exact": exact, "approx": approx}
+        out = {"exact": exact, "approx": approx}
+        if self.wall_ms:
+            # measured wall clock: informational only, never part of the
+            # golden compare (assert_matches_snapshot reads exact/approx)
+            out["wall"] = obs_metrics.exact_percentiles(self.wall_ms)
+        return out
 
     def assert_matches_snapshot(self, snapshot: dict,
                                 rel_tol: float = 0.25) -> None:
@@ -222,6 +268,9 @@ class ScenarioEngine:
         for ev in sc.crash_events:
             self._crashes[ev.tick].append(ev)
         self._crashed_until = {}           # cid -> first tick back up
+        # measured LQ latency curve (None -> LQ_MODEL_MS fallback); loaded
+        # once so every tick interpolates the same committed artifact
+        self._lq_curve = load_lq_curve()
 
     # ------------------------------------------------------------------
     def _store(self):
@@ -290,6 +339,10 @@ class ScenarioEngine:
 
         for i in range(T):
             wall0 = _time.perf_counter()
+            # manual enter/exit keeps the 200-line tick body un-nested;
+            # works identically for the no-op span when tracing is off
+            tick_span = obs_span("engine.tick", cat="engine", tick=i)
+            tick_span.__enter__()
             t = i * sc.tick_s
             if i == sc.n_ticks:
                 # drain phase: the chaos is over — clean links so every
@@ -306,11 +359,13 @@ class ScenarioEngine:
                     self.sessions[ev.cid].crash()
                     self.server.crash(ev.cid)
                     self.server.leave(ev.cid)
-            spawned, moved, removed = self._apply_events(i)
+            with obs_span("engine.apply_events", cat="engine"):
+                spawned, moved, removed = self._apply_events(i)
             if self.mapper is not None and self.frames is not None \
                     and i < len(self.frames):
-                self.mapper.process_frame(self.frames[i], self.classes,
-                                          jax.random.fold_in(key, i))
+                with obs_span("engine.map_frame", cat="ingest"):
+                    self.mapper.process_frame(self.frames[i], self.classes,
+                                              jax.random.fold_in(key, i))
             gc_n = 0
             if self.world is not None and sc.tombstone_ttl is not None:
                 # sync-vector-driven slot retirement: a tombstone is
@@ -322,7 +377,8 @@ class ScenarioEngine:
                 gc_n = self.world.gc(tick=i, ttl=sc.tombstone_ttl,
                                      protected=blocked)
             store = self._store()
-            self.server.refresh(store)
+            with obs_span("engine.refresh", cat="sync"):
+                self.server.refresh(store)
 
             # churn + pose advance + deliverability
             deliverable = np.zeros(C, bool)
@@ -359,6 +415,8 @@ class ScenarioEngine:
 
             # client step: delivery + ingest + SQ/LQ mode
             mode = np.full(C, -1, np.int8)
+            step_span = obs_span("engine.client_step", cat="client")
+            step_span.__enter__()
             for spec in sc.clients:
                 cid, sess = spec.cid, self.sessions[spec.cid]
                 if not active[cid]:
@@ -374,10 +432,13 @@ class ScenarioEngine:
                 subs = self.server.subscribed[cid]
                 if not subs.all():
                     sess.prune_zones(self.server.grid, subs)
+            step_span.__exit__(None, None, None)
 
             # upstream control plane: cumulative acks + resync requests
             # (clean link: reliable outside outages; fault transport:
             # seeded uplink loss draws)
+            ctrl_span = obs_span("engine.control_plane", cat="sync")
+            ctrl_span.__enter__()
             for spec in sc.clients:
                 cid, sess = spec.cid, self.sessions[spec.cid]
                 if not self.joined[cid]:
@@ -396,12 +457,15 @@ class ScenarioEngine:
                         continue
                     if kind == "resync":
                         self.server.request_resync(cid)
+            ctrl_span.__exit__(None, None, None)
 
             # seeded query plan
             queried = np.zeros(C, np.int8)
             hit = np.full(C, -1, np.int8)
             q_ms = np.full(C, np.nan)
             classes = self._live_classes()
+            query_span = obs_span("engine.queries", cat="query")
+            query_span.__enter__()
             for spec in sc.clients:
                 cid = spec.cid
                 if not active[cid] or not len(classes):
@@ -433,8 +497,11 @@ class ScenarioEngine:
                 else:                    # LQ on the device local map
                     res = sess.dev.query_spec(Query(embed=emb,
                                                     k=sc.query.k))
-                    q_ms[cid] = LQ_MODEL_MS
+                    q_ms[cid] = lq_model_ms(
+                        int(np.asarray(sess.dev.local.active).sum()),
+                        self._lq_curve)
                     hit[cid] = self._score_hit(res, target)
+            query_span.__exit__(None, None, None)
 
             # MODELed device power for this tick
             sq_qps = (queried * (mode == 1)) / sc.tick_s
@@ -491,9 +558,16 @@ class ScenarioEngine:
             rec["up_bytes"].append(up - prev_up)
             rec["faults"].append(flt - prev_faults)
             prev_up, prev_faults = up, flt
-            self.wall_ms.append((_time.perf_counter() - wall0) * 1e3)
+            tick_wall = (_time.perf_counter() - wall0) * 1e3
+            self.wall_ms.append(tick_wall)
+            tick_span.__exit__(None, None, None)
+            reg = obs_metrics.get_registry()
+            if reg is not None:
+                reg.histogram("engine_tick_ms").observe(tick_wall)
+                reg.counter("engine_queries_total").inc(int(queried.sum()))
 
-        return MetricsLog(**{f: np.asarray(v) for f, v in rec.items()})
+        return MetricsLog(**{f: np.asarray(v) for f, v in rec.items()},
+                          wall_ms=self.wall_ms)
 
     # ------------------------------------------------------------------
     def _score_hit(self, res, target_cls: int) -> int:
