@@ -3,7 +3,7 @@
 The paper's query-latency claim (Fig. 4 / Sec. 2.3.2): the server answers
 open-vocabulary map queries in well under 100 ms at 10,000 objects.  This
 suite measures the compiled engine (`core.query.compile_query`) over
-synthetic stores of 1k / 10k / 30k objects, across predicate mixes:
+clustered synthetic stores from 1k to 1M objects, across predicate mixes:
 
   embed_only      cosine top-k, the seed query path's workload
   embed_spatial   + radius-around-user with proximity score combination
@@ -11,11 +11,27 @@ synthetic stores of 1k / 10k / 30k objects, across predicate mixes:
   full_mix        everything at once (spatial + attributes + zones)
   spatial_only    no embedding at all — pure predicate search
 
-Predicates are fused into the top-k dispatch as -inf score injection, so
-the acceptance target is predicate-heavy latency within 1.2x of
-embed_only at 10k objects (`fused_within_1_2x` in the JSON) — the
-predicates ride the same sweep, not a second pass.  A `batched16` row
-measures the serving amortization: 16 stacked queries in one dispatch.
+Two execution paths are timed at every size:
+
+  *_flat          the fused single-sweep dispatch (predicates as -inf
+                  score injection riding the top-k sweep)
+  full_mix_two_stage  the coarse-to-fine plan through a ClusterIndex
+                  (repro.index): rank cluster summaries, sweep only the
+                  surviving members, certify exactness against the bound
+
+``full_mix`` is the ENGINE DEFAULT path — two-stage once the index
+engages (>= min_flat_size live objects), flat below — which is what
+``sim.engine.load_lq_curve`` and the serving tier observe.  Correctness
+flags recorded per size: ``index_matches_flat`` (two-stage result
+byte-equal to the flat sweep) and ``oracle_parity*`` (both paths equal to
+a numpy flat-sweep oracle, score-tolerant for tie-breaking).
+
+Markers: ``predicate_overhead_x`` is computed PER SIZE (the seed computed
+it from the 10k row only, hiding the 30k regression) and
+``fused_within_1_2x`` takes the WORST size >= 10k (1k is dispatch-bound:
+predicate fusion cost is invisible next to dispatch overhead there).
+``sub_100ms_at_1m`` is the headline: full_mix under 100 ms at 1,000,000
+objects on the default path.
 """
 from __future__ import annotations
 
@@ -27,15 +43,18 @@ import jax.numpy as jnp
 
 from benchmarks.common import csv_row
 from repro.core.query import Query, compile_query
-from repro.core.store import synthetic_store
+from repro.core.store import clustered_synthetic_store
+from repro.obs import metrics as obs_metrics
 
 EDIM = 256
 K = 10
-GRID = (-8.0, -8.0, 8.0, 2, 2)          # (x0, z0, zone_size, nx, nz)
+ROOM = 80.0
+GRID = (-40.0, -40.0, 40.0, 2, 2)       # (x0, z0, zone_size, nx, nz)
+RADIUS = 4.0
 
 
 def _specs(qe, center):
-    radius = jnp.asarray(4.0, jnp.float32)
+    radius = jnp.asarray(RADIUS, jnp.float32)
     return {
         "embed_only": Query(embed=qe, k=K),
         "embed_spatial": Query(embed=qe, near=(center, radius),
@@ -66,46 +85,163 @@ def _time_plan(plan, target, spec, reps: int) -> float:
     return (time.perf_counter() - t0) / reps * 1e3
 
 
+def _reps(n: int, smoke: bool) -> int:
+    if smoke:
+        return 5
+    if n <= 30_000:
+        return 20
+    if n <= 100_000:
+        return 10
+    if n <= 300_000:
+        return 5
+    return 3
+
+
+def _np_oracle_full_mix(st, qe, center):
+    """Flat-sweep numpy oracle for the full_mix spec: f32 score math, k
+    best by stable argsort (ascending-slot tie-break, matching the
+    engine's documented order).  Returns (oids, scores) [K]."""
+    act = np.asarray(st.active)
+    sim = np.asarray(st.embed) @ np.asarray(qe)
+    d = np.linalg.norm(np.asarray(st.centroid) - np.asarray(center), axis=1)
+    ok = (act & (d <= RADIUS)
+          & np.isin(np.asarray(st.label), np.arange(10))
+          & (np.asarray(st.n_points) >= 4)
+          & (np.asarray(st.obs_count) >= 1))
+    score = np.where(ok, sim + np.float32(0.2) / (np.float32(1.0) + d),
+                     -np.inf).astype(np.float32)
+    order = np.argsort(-score, kind="stable")[:K]
+    return np.asarray(st.ids)[order], score[order]
+
+
+def _oracle_parity(res, oracle_scores) -> bool:
+    """Engine result == numpy oracle modulo tie-breaking and f32
+    accumulation-order noise: the k SCORES must agree to tolerance (equal
+    scores may belong to different tied members — documented)."""
+    s = np.sort(np.asarray(res.scores))[::-1]
+    o = np.sort(np.asarray(oracle_scores))[::-1]
+    fin = np.isfinite(o)
+    return bool(np.array_equal(fin, np.isfinite(s))
+                and np.allclose(s[fin], o[fin], rtol=5e-5, atol=1e-5))
+
+
+def _results_equal(a, b) -> bool:
+    return bool(np.array_equal(np.asarray(a.oids), np.asarray(b.oids))
+                and np.array_equal(np.asarray(a.slots), np.asarray(b.slots))
+                and np.allclose(np.asarray(a.scores), np.asarray(b.scores),
+                                rtol=1e-6, atol=1e-7, equal_nan=True))
+
+
 def run(full: bool = False, smoke: bool = False, use_pallas: bool = False):
-    sizes = [256] if smoke else [1_000, 10_000, 30_000]
-    reps = 5 if smoke else 20
+    from repro.index import ClusterIndex
+    # smoke keeps a sub-threshold row (flat path) AND a row right at the
+    # production engagement threshold (two-stage + certificate + the
+    # >=10k overhead marker all run in CI, at the smallest honest shape)
+    sizes = [256, 16_384] if smoke else \
+        [1_000, 10_000, 30_000, 100_000, 300_000, 1_000_000]
     out = {"k": K, "embed_dim": EDIM, "use_pallas": use_pallas}
+    overhead_10k_up = []
+    parity_all, match_all = [], []
     for n in sizes:
-        st = synthetic_store(n, n, EDIM, 16, seed=0,
-                             centroid_low=(-8.0, 0.0, -8.0),
-                             centroid_high=(8.0, 2.0, 8.0))
-        qe = st.embed[n // 2]
-        center = st.centroid[n // 2]
+        reps = _reps(n, smoke)
+        # hotspot count scales with n (~2k objects per hotspot at the top
+        # end) so per-cell occupancy stays realistic at every size
+        st = clustered_synthetic_store(n, n, EDIM, 16, seed=0, room=ROOM,
+                                       n_hotspots=max(128, n // 2_000))
+        # query AS an object that passes the full_mix label filter, so the
+        # top-k is its own hotspot (the realistic ask) at every size
+        lab_ok = np.nonzero(np.asarray(st.label) < 10)[0]
+        qi = int(lab_ok[len(lab_ok) // 2])
+        qe = st.embed[qi]
+        center = st.centroid[qi]
+        specs = _specs(qe, center)
         row = {}
-        for name, spec in _specs(qe, center).items():
+        for name, spec in specs.items():
             plan = compile_query(spec, st, use_pallas=use_pallas)
-            row[name] = _time_plan(plan, st, spec, reps)
-            csv_row(f"query_engine[{n},{name}]", row[name] * 1e3,
+            key = "full_mix_flat" if name == "full_mix" else name
+            row[key] = _time_plan(plan, st, spec, reps)
+            csv_row(f"query_engine[{n},{key}]", row[key] * 1e3,
                     f"k={K};pallas={int(use_pallas)}")
+
+        # the coarse-to-fine path: build (timed) + query through the index
+        t0 = time.perf_counter()
+        idx = ClusterIndex.for_target(st)
+        row["index_build_s"] = time.perf_counter() - t0
+        row["index_engaged"] = idx.engaged()
+        row["index_n_cells"] = idx.grid.n_cells
+        reg = obs_metrics.MetricsRegistry()
+        prev = obs_metrics.set_registry(reg)
+        try:
+            tplan = compile_query(specs["full_mix"], st,
+                                  use_pallas=use_pallas, index=idx)
+            row["full_mix_two_stage"] = _time_plan(tplan, st,
+                                                   specs["full_mix"], reps)
+            two_res = tplan(st, specs["full_mix"])
+        finally:
+            obs_metrics.set_registry(prev)
+        h = reg.histograms.get("query_index_candidate_fraction")
+        row["candidate_fraction"] = h.summary() if h is not None else None
+        esc = reg.counters.get("query_index_escalations_total")
+        row["escalations"] = int(esc.total()) if esc is not None else 0
+        row["full_mix"] = row["full_mix_two_stage"] if idx.engaged() \
+            else row["full_mix_flat"]
+        csv_row(f"query_engine[{n},full_mix_two_stage]",
+                row["full_mix_two_stage"] * 1e3,
+                f"engaged={int(idx.engaged())};"
+                f"cells={idx.grid.n_cells}")
+
+        # correctness: two-stage == flat == numpy oracle
+        flat_res = compile_query(specs["full_mix"], st,
+                                 use_pallas=use_pallas)(st)
+        row["index_matches_flat"] = _results_equal(flat_res, two_res)
+        _, o_scores = _np_oracle_full_mix(st, qe, center)
+        row["oracle_parity_flat"] = _oracle_parity(flat_res, o_scores)
+        row["oracle_parity_two_stage"] = _oracle_parity(two_res, o_scores)
+        parity_all += [row["oracle_parity_flat"],
+                       row["oracle_parity_two_stage"]]
+        match_all.append(row["index_matches_flat"])
+
         # serving amortization: 16 same-plan queries, one fused dispatch
         qs = jnp.tile(qe[None], (16, 1))
         cs = jnp.tile(center[None], (16, 1))
-        bspec = Query(embed=qs, near=(cs, jnp.full((16,), 4.0, jnp.float32)),
+        bspec = Query(embed=qs,
+                      near=(cs, jnp.full((16,), RADIUS, jnp.float32)),
                       prox_weight=jnp.full((16,), 0.2, jnp.float32),
                       k=K, batched=True)
-        bplan = compile_query(bspec, st, use_pallas=use_pallas)
+        bplan = compile_query(bspec, st, use_pallas=use_pallas,
+                              index=idx if idx.engaged() else None)
         bt = _time_plan(bplan, st, bspec, reps)
         row["batched16"] = bt
         row["batched16_per_query"] = bt / 16
         csv_row(f"query_engine[{n},batched16]", bt * 1e3,
                 f"per_query_ms={bt / 16:.3f}")
+
+        # per-size fusion overhead on the FLAT path (the marker the seed
+        # computed only at 10k, hiding the 30k regression)
         heavy = max(row["embed_spatial"], row["embed_attrs"],
-                    row["full_mix"])
+                    row["full_mix_flat"])
         row["predicate_overhead_x"] = heavy / row["embed_only"]
+        if n >= 10_000:
+            overhead_10k_up.append(row["predicate_overhead_x"])
         out[str(n)] = row
-    mid = str(sizes[min(1, len(sizes) - 1)])
-    out["fused_within_1_2x"] = bool(
-        out[mid]["predicate_overhead_x"] <= 1.2)
+
+    # worst overhead over the sizes where dispatch cost doesn't dominate
+    worst = max(overhead_10k_up) if overhead_10k_up else \
+        out[str(sizes[-1])]["predicate_overhead_x"]
+    out["predicate_overhead_worst_x"] = worst
+    out["fused_within_1_2x"] = bool(worst <= 1.2)
+    mid = str(10_000) if "10000" in out else str(sizes[-1])
     out["sub_100ms_at_10k"] = bool(out[mid]["full_mix"] < 100.0)
-    csv_row("query_engine[overhead@10k]",
-            out[mid]["predicate_overhead_x"] * 1e6,
+    big = str(sizes[-1])
+    out["sub_100ms_at_1m"] = bool(sizes[-1] >= 1_000_000
+                                  and out[big]["full_mix"] < 100.0) \
+        if not smoke else bool(out[big]["full_mix"] < 100.0)
+    out["oracle_parity_all"] = bool(all(parity_all))
+    out["index_matches_flat_all"] = bool(all(match_all))
+    csv_row("query_engine[overhead_worst]", worst * 1e6,
             f"fused_within_1.2x={out['fused_within_1_2x']};"
-            f"sub_100ms={out['sub_100ms_at_10k']}")
+            f"sub_100ms_at_1m={out['sub_100ms_at_1m']};"
+            f"oracle={out['oracle_parity_all']}")
     return out
 
 

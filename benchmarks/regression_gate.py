@@ -62,8 +62,17 @@ SPECS = {
         Check("*.full_mix", "latency", LAT),
         Check("*.embed_only", "latency", LAT),
         Check("*.batched16_per_query", "latency", LAT),
-        Check("fused_within_1_2x", "invariant_true"),
+        # worst-over-sizes fusion overhead is tracked as a band, not a
+        # fixed 1.2x invariant: the seed's flag was computed from the 10k
+        # row only and a hard threshold flaps on dispatch-bound noise
+        Check("predicate_overhead_worst_x", "latency", LAT),
         Check("sub_100ms_at_10k", "invariant_true"),
+        Check("sub_100ms_at_1m", "invariant_true"),
+        # exactness of the coarse-to-fine plan: numpy flat-sweep oracle
+        # parity at every size, and two-stage byte-equal to the flat sweep
+        Check("oracle_parity_all", "invariant_true"),
+        Check("index_matches_flat_all", "invariant_true"),
+        Check("*.index_matches_flat", "invariant_true"),
     ],
     "fleet_scale": [
         Check("sweep.*.tick_ms", "latency", LAT),

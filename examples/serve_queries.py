@@ -75,6 +75,27 @@ def main():
                 for o, s in zip(res.oids, res.scores) if o]
         print(f"  [{kinds[rids[rid]]:18s}] hits: {hits}")
 
+    # cluster-level query through the same compiler: "where is the densest
+    # region matching <text>?" — the summaries ARE the results, no object
+    # sweep at all (Query(level='cluster') + the coarse-to-fine index)
+    from repro.core.query import execute_query
+    from repro.index import ClusterIndex
+
+    idx = ClusterIndex.for_target(srv.store, n_cells_target=16,
+                                  min_flat_size=1)
+    cid = int(mapped[0])
+    spec = Query(embed=emb.embed_text(cid),
+                 density_weight=jnp.asarray(0.5), k=3, level="cluster")
+    cres = execute_query(srv.store, spec, index=idx)
+    print(f"densest regions matching class {cid}:")
+    for c, s, n, xyz in zip(np.asarray(cres.cells), np.asarray(cres.scores),
+                            np.asarray(cres.counts),
+                            np.asarray(cres.centroids)):
+        if c >= 0:
+            print(f"  cell {int(c):3d}: {int(n):2d} objects around "
+                  f"({xyz[0]:+.1f}, {xyz[1]:+.1f}, {xyz[2]:+.1f}) "
+                  f"score={float(s):.3f}")
+
 
 if __name__ == "__main__":
     main()

@@ -98,9 +98,13 @@ class UpdateBatch(NamedTuple):
     deleted: jax.Array = None   # [U] bool — tombstone rows (None = all live)
 
 
-def _admit_one(m: LocalMap, u: ObjectUpdate, priority: jax.Array,
-               enabled: jax.Array) -> LocalMap:
-    """Core admission/eviction step shared by the single and batched paths.
+def _admit_one_slot(m: LocalMap, u: ObjectUpdate, priority: jax.Array,
+                    enabled: jax.Array):
+    """Core admission/eviction step shared by the single and batched paths;
+    returns ``(map, touched_slot)`` — the slot this row wrote or freed, or
+    -1 when the row was a no-op (stale, padding, unadmitted, or a tombstone
+    for an unretained id).  The touched slots feed cluster-index
+    maintenance (repro.index.ClusterIndex.update_slots) without a diff.
 
     A tombstone row (``u.deleted``) frees the matching slot instead of
     admitting: id retired, entry deactivated — the slot is immediately
@@ -154,7 +158,15 @@ def _admit_one(m: LocalMap, u: ObjectUpdate, priority: jax.Array,
             priority=m.priority.at[slot].set(priority),
         )
 
-    return jax.lax.cond(admit, write, lambda x: x, m)
+    m = jax.lax.cond(admit, write, lambda x: x, m)
+    touched = jnp.where(erase, slot_existing,
+                        jnp.where(admit, slot, -1)).astype(jnp.int32)
+    return m, touched
+
+
+def _admit_one(m: LocalMap, u: ObjectUpdate, priority: jax.Array,
+               enabled: jax.Array) -> LocalMap:
+    return _admit_one_slot(m, u, priority, enabled)[0]
 
 
 def prune_slots(m: LocalMap, drop: jax.Array) -> LocalMap:
@@ -196,3 +208,19 @@ def apply_updates_batch(m: LocalMap, batch: UpdateBatch,
 
     m, _ = jax.lax.scan(step, m, (batch, priorities))
     return m
+
+
+def apply_updates_batch_slots(m: LocalMap, batch: UpdateBatch,
+                              priorities: jax.Array):
+    """``apply_updates_batch`` that also returns the touched slots [U]
+    (written or freed row per batch entry, -1 for no-ops) — the O(changes)
+    feed for cluster-index maintenance on the device ingest path."""
+    def step(m: LocalMap, x):
+        row, pri = x
+        u = ObjectUpdate(oid=row.oid, embed=row.embed, label=row.label,
+                         points=row.points, n_points=row.n_points,
+                         centroid=row.centroid, version=row.version,
+                         deleted=row.deleted)
+        return _admit_one_slot(m, u, pri, row.valid)
+
+    return jax.lax.scan(step, m, (batch, priorities))

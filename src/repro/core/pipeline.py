@@ -85,6 +85,7 @@ class MappingServer:
     store: ObjectStore = None
     frame_count: int = 0
     deferred: int = 0
+    cluster_index: object = None    # repro.index.ClusterIndex | None
 
     def __post_init__(self):
         kn = self.knobs
@@ -208,6 +209,7 @@ class MappingServer:
                 sp.fence(self.store.active)
             jax.block_until_ready(self.store.active)
             times.ingest_ms = (time.perf_counter() - t0) * 1e3
+            self._maintain_index()
             self.frame_count += 1
             times.record(self.mode)
             return times
@@ -267,6 +269,19 @@ class MappingServer:
         jax.block_until_ready(self.store.active)
         times.associate_ms = (time.perf_counter() - t0) * 1e3
 
+        self._maintain_index()
         self.frame_count += 1
         times.record(self.mode)
         return times
+
+    # ------------------------------------------------------------------
+    def enable_index(self, **kw) -> None:
+        """Attach a cluster-summary index (repro.index) over the mapping
+        store; every mapped keyframe then maintains it incrementally and
+        ``CloudService.query_spec`` plans coarse-to-fine through it."""
+        from repro.index import ClusterIndex
+        self.cluster_index = ClusterIndex.for_target(self.store, **kw)
+
+    def _maintain_index(self):
+        if self.cluster_index is not None:
+            self.cluster_index.refresh(self.store)

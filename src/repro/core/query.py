@@ -59,8 +59,8 @@ from repro.obs.trace import span as obs_span
 NEG = -1e30          # kernel-side mask value (see kernels/query_topk.py)
 
 _DYN_FIELDS = ("embed", "sem_weight", "near", "aabb", "prox_weight",
-               "min_points", "min_obs", "since")
-_STATIC_FIELDS = ("labels", "zones", "grid", "k", "batched")
+               "min_points", "min_obs", "since", "density_weight")
+_STATIC_FIELDS = ("labels", "zones", "grid", "k", "batched", "level")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -81,6 +81,9 @@ class Query:
                    (vacuous on targets without obs_count, e.g. LocalMap)
       since        scalar frame index: keep objects with last_seen >= since
                    (vacuous on targets without last_seen)
+      density_weight  scalar (cluster-level queries only): add
+                   density_weight * log1p(member count) to a cluster's
+                   score — "the densest region matching this text"
 
     Static plan structure (participates in the jit cache key):
       labels       tuple of allowed class ids
@@ -90,6 +93,10 @@ class Query:
                    (see ``Query.grid_of``)
       k            top-k size
       batched      leaves carry a leading query dim Q (see stack_queries)
+      level        "object" (default) returns top-k objects;
+                   "cluster" returns top-k *cluster summaries* (a
+                   ``repro.index.ClusterResult``) — requires a
+                   ClusterIndex on the target / compile call
     """
     embed: Any = None
     sem_weight: Any = None
@@ -99,11 +106,13 @@ class Query:
     min_points: Any = None
     min_obs: Any = None
     since: Any = None
+    density_weight: Any = None
     labels: tuple | None = None
     zones: tuple | None = None
     grid: tuple | None = None
     k: int = 5
     batched: bool = False
+    level: str = "object"
 
     def tree_flatten(self):
         return (tuple(getattr(self, f) for f in _DYN_FIELDS),
@@ -340,6 +349,17 @@ def _select_shards(spec: Query, target) -> list:
     return list(range(Z))
 
 
+def _count_flat_fallback():
+    """Mark an index-carrying target served by the flat sweep (below the
+    engagement threshold) — the coverage counterpart of
+    ``query_index_two_stage_total``."""
+    from repro.obs import metrics as obs_metrics
+    reg = obs_metrics.get_registry()
+    if reg is not None:
+        reg.counter("query_index_flat_total",
+                    "index present but below min_flat_size: flat sweep").inc()
+
+
 @dataclass
 class CompiledQuery:
     """A (spec, target)-shaped executable plan.
@@ -348,10 +368,19 @@ class CompiledQuery:
     (and/or an updated target) to re-execute without retracing.  For sharded
     targets the shard selection is fixed at compile time from the spec's
     concrete zone/near values.
+
+    ``index`` (a ``repro.index.ClusterIndex``, or a ``{zone: ClusterIndex}``
+    dict for sharded targets) switches the plan to the coarse-to-fine
+    two-stage path when the target is large enough (``index.engaged()``);
+    below that threshold the flat sweep runs unchanged.  When no index is
+    passed the plan discovers one on the target itself
+    (``target.cluster_index`` / ``target.indexes``).  ``level="cluster"``
+    specs require an index and return a ``repro.index.ClusterResult``.
     """
     spec: Query
     use_pallas: bool = False
     shards: tuple | None = None        # zone ids (sharded targets only)
+    index: Any = None                  # ClusterIndex | {zone: ClusterIndex}
 
     def __call__(self, target, spec: Query | None = None) -> QueryResult:
         with obs_span("query.dispatch", cat="query",
@@ -363,25 +392,79 @@ class CompiledQuery:
     def _run(self, target, spec: Query | None = None) -> QueryResult:
         spec = self.spec if spec is None else spec
         if not _is_sharded(target):
+            idx = self.index if self.index is not None \
+                else getattr(target, "cluster_index", None)
+            if spec.level == "cluster":
+                if idx is None:
+                    raise ValueError(
+                        "Query(level='cluster') needs a ClusterIndex: pass "
+                        "index= to compile_query or attach one as "
+                        "target.cluster_index")
+                from repro.index.search import cluster_query
+                return cluster_query(spec, [(None, idx, target)])
+            if idx is not None:
+                if idx.engaged():
+                    from repro.index.search import two_stage_query
+                    return two_stage_query(spec, target, idx,
+                                           use_pallas=self.use_pallas)
+                _count_flat_fallback()
             return _execute(spec, _columns(target),
                             use_pallas=self.use_pallas)
+        return self._run_sharded(target, spec)
+
+    def _run_sharded(self, target, spec: Query) -> QueryResult:
         shards = self.shards if self.shards is not None \
             else tuple(_select_shards(spec, target))
+        idxs = self.index if self.index is not None \
+            else getattr(target, "indexes", None)
+        if not idxs:                   # {} (index never enabled) == None
+            idxs = None
         k = spec.k
         Q = None
         if spec.batched:
             lead = jax.tree.leaves(spec)
             Q = int(lead[0].shape[0]) if lead else 1
+        if spec.level == "cluster":
+            from repro.index.search import ClusterResult, cluster_query
+            items = [] if idxs is None else \
+                [(z, idxs[z], target.zones[z]) for z in shards
+                 if idxs.get(z) is not None]
+            if not items:
+                if idxs is None:
+                    raise ValueError(
+                        "Query(level='cluster') on a sharded target needs "
+                        "zone indexes: pass index= to compile_query or call "
+                        "enable_index() on the store")
+                shape = (k,) if Q is None else (Q, k)
+                return ClusterResult(
+                    zones=jnp.full(shape, -1, jnp.int32),
+                    cells=jnp.full(shape, -1, jnp.int32),
+                    scores=jnp.full(shape, -jnp.inf),
+                    counts=jnp.zeros(shape, jnp.int32),
+                    centroids=jnp.zeros(shape + (3,), jnp.float32))
+            return cluster_query(spec, items)
         if not shards:
             shape = (k,) if Q is None else (Q, k)
             return QueryResult(oids=jnp.zeros(shape, jnp.int32),
                                scores=jnp.full(shape, -jnp.inf),
                                slots=jnp.full(shape, -1, jnp.int32))
         # the same fused plan per selected shard (shards share shapes, so
-        # this compiles once), then a [k]-sized merge
+        # this compiles once), then a [k]-sized merge; shards with an
+        # engaged index take the two-stage path, the rest stay flat
         bspec = spec if spec.batched else _promote(spec)
-        parts = [_execute(bspec, _columns(target.zones[z]),
-                          use_pallas=self.use_pallas) for z in shards]
+        parts = []
+        for z in shards:
+            zt = target.zones[z]
+            zidx = None if idxs is None else idxs.get(z)
+            if zidx is not None and zidx.engaged():
+                from repro.index.search import two_stage_query
+                parts.append(two_stage_query(bspec, zt, zidx,
+                                             use_pallas=self.use_pallas))
+            else:
+                if zidx is not None:
+                    _count_flat_fallback()
+                parts.append(_execute(bspec, _columns(zt),
+                                      use_pallas=self.use_pallas))
         res = _merge_shards(jnp.stack([p.oids for p in parts]),
                             jnp.stack([p.scores for p in parts]),
                             jnp.stack([p.slots for p in parts]),
@@ -392,23 +475,26 @@ class CompiledQuery:
         return res
 
 
-def compile_query(spec: Query, target, *,
-                  use_pallas: bool = False) -> CompiledQuery:
+def compile_query(spec: Query, target, *, use_pallas: bool = False,
+                  index: Any = None) -> CompiledQuery:
     """Lower ``spec`` against ``target``'s kind into one executable plan.
 
     ``target`` is a LocalMap, ObjectStore, or ZoneShardedStore (duck-typed).
     The returned plan is reusable: call it with updated targets/specs of the
-    same structure without recompiling.
+    same structure without recompiling.  ``index`` (or an index discovered
+    on the target) makes the plan coarse-to-fine — see ``CompiledQuery``.
     """
     shards = tuple(_select_shards(spec, target)) if _is_sharded(target) \
         else None
-    return CompiledQuery(spec=spec, use_pallas=use_pallas, shards=shards)
+    return CompiledQuery(spec=spec, use_pallas=use_pallas, shards=shards,
+                         index=index)
 
 
-def execute_query(target, spec: Query, *,
-                  use_pallas: bool = False) -> QueryResult:
+def execute_query(target, spec: Query, *, use_pallas: bool = False,
+                  index: Any = None) -> QueryResult:
     """One-shot convenience: compile (cached by structure) + run."""
-    return CompiledQuery(spec=spec, use_pallas=use_pallas)(target)
+    return CompiledQuery(spec=spec, use_pallas=use_pallas,
+                         index=index)(target)
 
 
 # ---------------------------------------------------------------------------

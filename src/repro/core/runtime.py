@@ -27,7 +27,8 @@ import jax.numpy as jnp
 
 from repro.core import query as query_mod
 from repro.core.knobs import Knobs
-from repro.core.local_map import (LocalMap, apply_update, apply_updates_batch,
+from repro.core.local_map import (LocalMap, apply_update,
+                                  apply_updates_batch_slots,
                                   compute_priority, init_local_map,
                                   local_map_nbytes, prune_slots)
 from repro.core.store import ObjectStore
@@ -159,7 +160,9 @@ def _client_fns(knobs: Knobs, use_pallas: bool):
         pri = compute_priority(batch.embed, batch.label, batch.centroid,
                                user_pos=user_pos, knobs=knobs,
                                interest_embeds=interest_embeds)
-        return apply_updates_batch(m, batch, pri)
+        # (map, touched slots [U]) — the slots feed cluster-index
+        # maintenance when the client has one enabled
+        return apply_updates_batch_slots(m, batch, pri)
     return query, apply_one, jax.jit(_ingest_fn)
 
 
@@ -169,6 +172,7 @@ class DeviceClient:
     embed_dim: int
     local: LocalMap = None
     use_pallas: bool = False
+    cluster_index: object = None       # repro.index.ClusterIndex | None
     # measured stats
     lq_count: int = 0
     sq_count: int = 0
@@ -179,14 +183,24 @@ class DeviceClient:
         self._query, self._apply, self._ingest = _client_fns(
             self.knobs, self.use_pallas)
 
+    def enable_index(self, **kw) -> None:
+        """Attach a cluster-summary index over the local map; from then on
+        every ingest maintains it from the batch's touched slots and
+        ``query_spec`` plans coarse-to-fine once the map is big enough."""
+        from repro.index import ClusterIndex
+        self.cluster_index = ClusterIndex.for_target(self.local, **kw)
+
     def ingest(self, packet, *, user_pos, interest_embeds=None):
         """Apply a whole UpdatePacket in ONE jitted dispatch: batched
         compute_priority + apply_updates_batch (scan inside the jit) —
         vs the seed's per-object apply_update loop (N dispatches/tick)."""
         if packet is None or packet.count == 0:
             return
-        self.local = self._ingest(self.local, packet.batch, user_pos,
-                                  interest_embeds)
+        self.local, touched = self._ingest(self.local, packet.batch,
+                                           user_pos, interest_embeds)
+        if self.cluster_index is not None:
+            t = np.unique(np.asarray(touched))
+            self.cluster_index.update_slots(self.local, t[t >= 0])
 
     def ingest_sequential(self, packet, *, user_pos, interest_embeds=None):
         """Seed per-object ingest path — kept as the microbenchmark baseline
@@ -211,9 +225,11 @@ class DeviceClient:
     def query_spec(self, spec):
         """Declarative LQ: run a full ``core.query.Query`` (spatial +
         attribute predicates, score combination) against the local map as
-        one fused dispatch."""
+        one fused dispatch — coarse-to-fine through ``cluster_index`` when
+        one is enabled and the map has outgrown the flat sweep."""
         res = query_mod.execute_query(self.local, spec,
-                                      use_pallas=self.use_pallas)
+                                      use_pallas=self.use_pallas,
+                                      index=self.cluster_index)
         jax.block_until_ready(res.scores)
         self.lq_count += 1
         return res
@@ -295,8 +311,11 @@ class CloudService:
 
     def query_spec(self, spec):
         """Declarative SQ: one fused predicate+score+top-k dispatch over
-        the server store (see core.query.Query)."""
-        res = query_mod.execute_query(self.store_ref.store, spec)
+        the server store (see core.query.Query) — two-stage through the
+        mapping server's cluster index when it maintains one."""
+        res = query_mod.execute_query(
+            self.store_ref.store, spec,
+            index=getattr(self.store_ref, "cluster_index", None))
         jax.block_until_ready(res.scores)
         return res
 
@@ -400,6 +419,13 @@ class ClientSession:
         if fresh:
             self.dev.local = init_local_map(self.dev.knobs,
                                             self.dev.embed_dim)
+            self._resync_index()
+
+    def _resync_index(self) -> None:
+        """Re-diff the client's cluster index after a map replacement that
+        bypassed the ingest path (epoch reset, crash, zone prune)."""
+        if self.dev.cluster_index is not None:
+            self.dev.cluster_index.refresh(self.dev.local)
 
     def _ack(self, zone: int, seq: int) -> None:
         self.acks.append((zone, self.epoch, seq))
@@ -540,6 +566,7 @@ class ClientSession:
         n = int(drop.sum())
         if n:
             self.dev.local = prune_slots(m, jnp.asarray(drop))
+            self._resync_index()
         return n
 
     def crash(self) -> None:
@@ -553,6 +580,7 @@ class ClientSession:
         self.acks.clear()
         self.ctrl.clear()
         self.dev.local = init_local_map(self.dev.knobs, self.dev.embed_dim)
+        self._resync_index()
         self.epoch = -1
         self._expect = {}
         self._reorder = {}

@@ -111,6 +111,55 @@ def synthetic_store(n: int, capacity: int, embed_dim: int, max_points: int,
         next_id=jnp.asarray(n + 1, jnp.int32))
 
 
+def clustered_synthetic_store(n: int, capacity: int, embed_dim: int,
+                              max_points: int, *, seed: int = 0,
+                              n_proto: int = 64, proto_spread: float = 0.5,
+                              n_hotspots: int = 128, room: float = 80.0,
+                              hotspot_sigma: float = 1.2,
+                              n_labels: int = 20,
+                              obs_count: int = 3) -> ObjectStore:
+    """Like ``synthetic_store`` but with *structured* content: centroids
+    clustered around ``n_hotspots`` spatial hotspots in a ``room``-sized
+    floor, and each hotspot populated from ONE of ``n_proto`` embedding
+    prototypes (members = prototype + ``proto_spread``-norm noise,
+    renormalized).  Real scenes look like this — many instances of few
+    object kinds, spatially grouped (a desk cluster of monitors, a shelf
+    of books) — and it is the regime where a cluster index earns its keep:
+    i.i.d.-random embeddings give every cell the same mean and a residual
+    near 1, so the coarse semantic bound can never certify a pruned sweep.
+    Point clouds are zero-filled: at index/query scale the geometry column
+    is dead weight (n_points is drawn, so predicates still bite)."""
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(size=(n_proto, embed_dim)).astype(np.float32)
+    protos /= np.linalg.norm(protos, axis=1, keepdims=True)
+    hid = rng.integers(0, n_hotspots, size=n)
+    pid = hid % n_proto                  # spatially-correlated object kinds
+    # noise scaled to unit-vector norm: ||noise|| ~ proto_spread, so
+    # within-hotspot cosine similarity stays ~1/sqrt(1 + spread^2)
+    emb = protos[pid] + proto_spread / np.sqrt(embed_dim) * rng.normal(
+        size=(n, embed_dim)).astype(np.float32)
+    emb /= np.linalg.norm(emb, axis=1, keepdims=True)
+
+    hot = rng.uniform(-room / 2, room / 2, size=(n_hotspots, 3)) \
+        .astype(np.float32)
+    hot[:, 1] = rng.uniform(0.0, 2.0, size=n_hotspots)
+    cents = hot[hid] + hotspot_sigma * rng.normal(size=(n, 3)) \
+        .astype(np.float32)
+
+    st = init_store(capacity, embed_dim, 1)   # P=1: geometry is dead weight
+    return st._replace(
+        ids=st.ids.at[:n].set(jnp.arange(1, n + 1, dtype=jnp.int32)),
+        active=st.active.at[:n].set(True),
+        embed=st.embed.at[:n].set(emb),
+        label=st.label.at[:n].set(jnp.asarray(pid % n_labels, jnp.int32)),
+        n_points=st.n_points.at[:n].set(jnp.asarray(
+            rng.integers(4, max(max_points, 5), size=n), jnp.int32)),
+        centroid=st.centroid.at[:n].set(cents),
+        obs_count=st.obs_count.at[:n].set(obs_count),
+        version=st.version.at[:n].set(1),
+        next_id=jnp.asarray(n + 1, jnp.int32))
+
+
 def n_active(store: ObjectStore) -> jax.Array:
     return store.active.sum()
 

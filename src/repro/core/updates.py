@@ -59,11 +59,18 @@ def update_nbytes(embed_dim: int, n_points: int, *,
     return _HEADER_B + 2 * embed_dim + 6 * int(n_points)
 
 
-def _bucket(n: int) -> int:
+def bucket(n: int) -> int:
+    """Round ``n`` up to the next power-of-two batch bucket (min 8) — the
+    shared padding policy bounding jit retraces across every delta path
+    (update collect, zone scatters, tombstone release, cluster-index
+    recompute)."""
     b = _MIN_BUCKET
     while b < n:
         b *= 2
     return b
+
+
+_bucket = bucket          # original (private) name, kept for call sites
 
 
 @functools.lru_cache(maxsize=None)

@@ -1,0 +1,18 @@
+"""Hierarchical coarse-to-fine query index (the cluster-summary level).
+
+``cluster``   — the incrementally-maintained per-cell summaries + member
+                tables (never rebuilt from scratch on the hot path).
+``search``    — the two-stage certified-exact query execution and the
+                first-class cluster-level result mode.
+
+``core.query.compile_query(spec, target, index=...)`` is the front door;
+this package is the machinery behind it.
+"""
+from repro.index.cluster import (CellGrid, ClusterIndex, ClusterSummaries,
+                                 DEFAULT_MIN_FLAT, rebuilt, summaries_equal)
+from repro.index.search import (ClusterResult, cluster_query,
+                                two_stage_query)
+
+__all__ = ["CellGrid", "ClusterIndex", "ClusterSummaries",
+           "DEFAULT_MIN_FLAT", "rebuilt", "summaries_equal",
+           "ClusterResult", "cluster_query", "two_stage_query"]

@@ -1,0 +1,429 @@
+"""Incrementally-maintained cluster-summary level above the object maps.
+
+The flat fused query sweep (core/query.py) is O(N) per dispatch: great to
+~10k objects, cracking at 30k, ~100x off the ROADMAP's million-object
+target.  This module maintains one summary row per spatial grid cell —
+member count, centroid mean, member AABB, mean embedding plus the max
+embedding residual, per-class presence, and max n_points/obs/last_seen —
+so a query can first rank ~thousands of cells and then sweep only the
+members of the surviving cells (index/search.py), with a provable-exact
+certificate against the flat sweep.
+
+Maintenance contract (tested by tests/test_cluster_index.py):
+
+* **Incremental, never rebuilt.**  ``refresh(target)`` diffs the target's
+  (presence, version, cell) columns against the last view — the same
+  host-side bookkeeping idiom as ``server.zones.refresh_from`` — and
+  recomputes ONLY the dirty cells, as one bucketed jitted gather+reduce+
+  scatter per chunk.  ``update_slots`` is the O(changes) fast path for
+  callers that already know which slots they touched (zone-shard scatters,
+  the device ingest scan).
+* **Bit-identical to a from-scratch rebuild.**  Per-cell reductions always
+  run over the cell's member slots in ascending slot order at the fixed
+  ``cell_cap`` width, so the incremental value of an unchanged cell is the
+  byte-for-byte value a full rebuild would produce (the churn property
+  test drives random spawn/move/remove/tombstone streams and asserts it).
+* **Tombstones evict.**  Presence is ``active & ~deleted``: a tombstoned
+  slot leaves its cell the tick it is tombstoned and can never skew a
+  centroid or mean embedding.
+
+Cell-capacity overflow auto-grows: the member table doubles and rebuilds
+(the only from-scratch path, amortized O(log N) times over a map's life).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass, field
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.updates import bucket
+
+N_LABELS = 256                 # matches updates.class_budget_table
+_SENTINEL = np.iinfo(np.int32).max      # sorts after every real slot id
+_CHUNK = 256                   # max dirty cells per recompute dispatch
+
+# below this many live objects the flat sweep wins — the two-stage plan
+# (and its extra dispatches) only engages past it (core/query.py)
+DEFAULT_MIN_FLAT = 16_384
+
+
+@dataclass(frozen=True)
+class CellGrid:
+    """Fixed XZ partition of the indexed space into nx*nz summary cells.
+
+    Like ``server.zones.ZoneGrid`` but with independent x/z cell edges so
+    ``fit`` can wrap arbitrary scene bounds; out-of-bounds centroids clamp
+    to the border cells (mirroring ``ZoneGrid.zone_of``)."""
+    origin: tuple            # (x0, z0)
+    size: tuple              # (sx, sz) cell edge lengths
+    nx: int
+    nz: int
+
+    @property
+    def n_cells(self) -> int:
+        return self.nx * self.nz
+
+    @classmethod
+    def fit(cls, centroids: np.ndarray, n_cells_target: int) -> "CellGrid":
+        """Grid wrapping the given centroids with ~n_cells_target cells."""
+        n_side = max(1, int(math.isqrt(max(n_cells_target, 1))))
+        c = np.asarray(centroids, np.float64)
+        if c.size == 0:
+            lo, hi = np.array([-8.0, -8.0]), np.array([8.0, 8.0])
+        else:
+            lo = np.array([c[:, 0].min(), c[:, 2].min()])
+            hi = np.array([c[:, 0].max(), c[:, 2].max()])
+        span = np.maximum(hi - lo, 1e-3) * 1.001     # border objects inside
+        return cls(origin=(float(lo[0]), float(lo[1])),
+                   size=(float(span[0] / n_side), float(span[1] / n_side)),
+                   nx=n_side, nz=n_side)
+
+    @classmethod
+    def for_rect(cls, x0: float, z0: float, sx: float, sz: float,
+                 n_cells_target: int) -> "CellGrid":
+        """Grid subdividing a known rectangle (a zone shard's footprint) —
+        out-of-rect members clamp into the border cells, matching the
+        shard's own clamped routing."""
+        n_side = max(1, int(math.isqrt(max(n_cells_target, 1))))
+        return cls(origin=(float(x0), float(z0)),
+                   size=(float(sx) / n_side, float(sz) / n_side),
+                   nx=n_side, nz=n_side)
+
+    def cell_of(self, centroids: np.ndarray) -> np.ndarray:
+        """[M, 3] centroids -> [M] cell ids (host side, clamped)."""
+        c = np.atleast_2d(np.asarray(centroids))
+        ix = np.clip(((c[:, 0] - self.origin[0]) // self.size[0])
+                     .astype(np.int64), 0, self.nx - 1)
+        iz = np.clip(((c[:, 2] - self.origin[1]) // self.size[1])
+                     .astype(np.int64), 0, self.nz - 1)
+        return (ix * self.nz + iz).astype(np.int32)
+
+
+class ClusterSummaries(NamedTuple):
+    """One row per grid cell — everything the two-stage planner reads.
+
+    ``aabb_*`` is the tight AABB of member *centroids* (not cell bounds:
+    tighter, and exactly what the conservative spatial predicates need).
+    ``res_max`` is ``max_j ||embed_j - embed_mean||`` — with unit-norm
+    member embeddings it caps any member's cosine at
+    ``q . embed_mean + ||q|| * res_max`` (the stage-1 score bound).
+    Empty cells: count 0, aabb +inf/-inf, everything else zeros."""
+    count: jax.Array          # [M] int32
+    centroid: jax.Array       # [M, 3] f32 — mean of member centroids
+    aabb_min: jax.Array       # [M, 3] f32
+    aabb_max: jax.Array       # [M, 3] f32
+    embed_mean: jax.Array     # [M, E] f32
+    res_max: jax.Array        # [M] f32
+    label_any: jax.Array      # [M, N_LABELS] bool — classes present
+    n_points_max: jax.Array   # [M] int32
+    obs_max: jax.Array        # [M] int32 (0 when target has no obs_count)
+    last_seen_max: jax.Array  # [M] int32 (0 when target lacks last_seen)
+
+
+def _init_summaries(n_cells: int, embed_dim: int) -> ClusterSummaries:
+    M = n_cells
+    return ClusterSummaries(
+        count=jnp.zeros((M,), jnp.int32),
+        centroid=jnp.zeros((M, 3), jnp.float32),
+        aabb_min=jnp.full((M, 3), jnp.inf, jnp.float32),
+        aabb_max=jnp.full((M, 3), -jnp.inf, jnp.float32),
+        embed_mean=jnp.zeros((M, embed_dim), jnp.float32),
+        res_max=jnp.zeros((M,), jnp.float32),
+        label_any=jnp.zeros((M, N_LABELS), bool),
+        n_points_max=jnp.zeros((M,), jnp.int32),
+        obs_max=jnp.zeros((M,), jnp.int32),
+        last_seen_max=jnp.zeros((M,), jnp.int32))
+
+
+def _target_cols(target):
+    """(embed, label, n_points, centroid, obs_count|None, last_seen|None)
+    — the structural key mirrors core.query._columns."""
+    return (target.embed, target.label, target.n_points, target.centroid,
+            getattr(target, "obs_count", None),
+            getattr(target, "last_seen", None))
+
+
+@functools.partial(jax.jit, static_argnames=("cell_cap",))
+def _apply_cells(summ: ClusterSummaries, cols, cells: jax.Array,
+                 rows: jax.Array, *, cell_cap: int) -> ClusterSummaries:
+    """Recompute summaries for cells ``cells`` [D] from their sorted member
+    rows ``rows`` [D, cell_cap] (-1 padded) and scatter the fresh values in.
+
+    The per-cell reduction reads members in ascending-slot order at the
+    static cell_cap width, so its value is a pure function of (cell member
+    set, member columns) — independent of how many other cells ride the
+    same dispatch, which is what makes incremental == rebuild bit-exact.
+    Padding cells use index M (OOB: dropped by the scatter)."""
+    embed, label, n_points, centroid, obs, last_seen = cols
+    M = summ.count.shape[0]
+    valid = rows >= 0                                   # [D, cap_c]
+    idx = jnp.clip(rows, 0)
+    cnt = valid.sum(axis=1).astype(jnp.int32)           # [D]
+    den = jnp.maximum(cnt, 1).astype(jnp.float32)
+
+    cent = centroid[idx]                                # [D, cap_c, 3]
+    vm = valid[:, :, None]
+    c_mean = jnp.where(vm, cent, 0.0).sum(axis=1) / den[:, None]
+    a_min = jnp.where(vm, cent, jnp.inf).min(axis=1)
+    a_max = jnp.where(vm, cent, -jnp.inf).max(axis=1)
+
+    emb = embed[idx]                                    # [D, cap_c, E]
+    e_mean = jnp.where(vm, emb, 0.0).sum(axis=1) / den[:, None]
+    res = jnp.linalg.norm(emb - e_mean[:, None, :], axis=-1)
+    r_max = jnp.where(valid, res, 0.0).max(axis=1)
+
+    lab = jnp.clip(label[idx], 0, N_LABELS - 1)         # [D, cap_c]
+    D = rows.shape[0]
+    dd = jnp.broadcast_to(jnp.arange(D)[:, None], lab.shape)
+    l_any = jnp.zeros((D, N_LABELS), jnp.int32) \
+        .at[dd, lab].max(valid.astype(jnp.int32)) > 0
+
+    npts = jnp.where(valid, n_points[idx], 0).max(axis=1)
+    obs_m = jnp.zeros((D,), jnp.int32) if obs is None \
+        else jnp.where(valid, obs[idx], 0).max(axis=1)
+    seen_m = jnp.zeros((D,), jnp.int32) if last_seen is None \
+        else jnp.where(valid, last_seen[idx], 0).max(axis=1)
+
+    tgt = jnp.where(cells >= 0, cells, M)
+    put = lambda arr, v: arr.at[tgt].set(v.astype(arr.dtype), mode="drop")
+    return ClusterSummaries(
+        count=put(summ.count, cnt),
+        centroid=put(summ.centroid, c_mean),
+        aabb_min=put(summ.aabb_min,
+                     jnp.where(cnt[:, None] > 0, a_min, jnp.inf)),
+        aabb_max=put(summ.aabb_max,
+                     jnp.where(cnt[:, None] > 0, a_max, -jnp.inf)),
+        embed_mean=put(summ.embed_mean, e_mean),
+        res_max=put(summ.res_max, r_max),
+        label_any=put(summ.label_any, l_any),
+        n_points_max=put(summ.n_points_max, npts),
+        obs_max=put(summ.obs_max, obs_m),
+        last_seen_max=put(summ.last_seen_max, seen_m))
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class ClusterIndex:
+    """The cluster-summary index over ONE flat target (ObjectStore shard,
+    the monolithic server store, or a device LocalMap).
+
+    Host bookkeeping mirrors the target (per-slot cell assignment, per-cell
+    member lists); device state is the [n_cells, cell_cap] sorted member
+    table plus the ClusterSummaries pytree.  ``refresh`` diffs; callers
+    that know their deltas call ``update_slots`` directly."""
+    grid: CellGrid
+    embed_dim: int
+    capacity: int                       # target slot count
+    cell_cap: int
+    min_flat_size: int = DEFAULT_MIN_FLAT
+    summaries: ClusterSummaries = None
+    members: jax.Array = None           # [n_cells, cell_cap] int32, -1 pad,
+    #                                     each row ascending (stage-2 order)
+    # host mirrors
+    _members: np.ndarray = None         # unsorted insertion-order lists
+    _size: np.ndarray = None            # [n_cells] int32
+    _cell: np.ndarray = None            # [cap] int32 cell id, -1 = absent
+    _pos: np.ndarray = None             # [cap] int32 position in _members
+    _present: np.ndarray = None         # [cap] bool
+    _ver: np.ndarray = None             # [cap] int64 indexed version
+    _oid: np.ndarray = None             # [cap] int64 indexed object id —
+    #                                     catches slot reuse that keeps the
+    #                                     version (LocalMap eviction resets
+    #                                     version bookkeeping to 0)
+    updates: int = 0                    # maintenance dispatches issued
+    rebuilds: int = 0                   # cell_cap auto-grow events
+
+    def __post_init__(self):
+        M = self.grid.n_cells
+        if self.summaries is None:
+            self.summaries = _init_summaries(M, self.embed_dim)
+        if self._members is None:
+            self._members = np.full((M, self.cell_cap), -1, np.int32)
+            self.members = jnp.asarray(self._members)
+            self._size = np.zeros((M,), np.int32)
+            self._cell = np.full((self.capacity,), -1, np.int32)
+            self._pos = np.zeros((self.capacity,), np.int32)
+            self._present = np.zeros((self.capacity,), bool)
+            self._ver = np.full((self.capacity,), -1, np.int64)
+            self._oid = np.zeros((self.capacity,), np.int64)
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def for_target(cls, target, *, n_cells_target: int | None = None,
+                   cell_cap: int | None = None,
+                   min_flat_size: int = DEFAULT_MIN_FLAT) -> "ClusterIndex":
+        """Build (and fill) an index over a LocalMap/ObjectStore-shaped
+        target.  Cell count targets ~256 members per cell; cell capacity
+        is sized from the MEASURED peak occupancy (plus slack, auto-grown
+        on later overflow) — a global-average cap would pad the stage-2
+        candidate slab 4-8x past reality on hotspot-skewed scenes, and the
+        slab gather is the dominant cost of a two-stage query."""
+        act = np.asarray(target.active)
+        dele = getattr(target, "deleted", None)
+        present = act & ~np.asarray(dele) if dele is not None else act
+        n = max(int(present.sum()), 1)
+        cap = int(act.shape[0])
+        if n_cells_target is None:
+            n_cells_target = min(max(n // 256, 16), 16_384)
+        cents = np.asarray(target.centroid)[present]
+        grid = CellGrid.fit(cents, n_cells_target)
+        if cell_cap is None:
+            counts = np.bincount(grid.cell_of(cents),
+                                 minlength=grid.n_cells)
+            peak = int(counts.max()) if counts.size else 0
+            cell_cap = bucket(max(peak + (peak >> 2) + 8, 16))
+        idx = cls(grid=grid, embed_dim=int(target.embed.shape[1]),
+                  capacity=cap, cell_cap=int(cell_cap),
+                  min_flat_size=min_flat_size)
+        idx.refresh(target)
+        return idx
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def n_objects(self) -> int:
+        return int(self._size.sum())
+
+    def engaged(self) -> bool:
+        """Would the two-stage plan use this index right now?"""
+        return self.n_objects >= self.min_flat_size
+
+    def member_slots(self, cell: int) -> np.ndarray:
+        return np.sort(self._members[cell][:int(self._size[cell])])
+
+    # -- maintenance -------------------------------------------------------
+    def refresh(self, target) -> int:
+        """Diff the target against the last indexed view and update the
+        dirty cells.  Returns the number of changed slots."""
+        act = np.asarray(target.active)
+        dele = getattr(target, "deleted", None)
+        present = act & ~np.asarray(dele) if dele is not None else act
+        ver = np.asarray(target.version).astype(np.int64)
+        ids = np.asarray(target.ids).astype(np.int64)
+        changed = (present != self._present) \
+            | (present & ((ver != self._ver) | (ids != self._oid)))
+        if changed.any():
+            self.update_slots(target, np.nonzero(changed)[0])
+        return int(changed.sum())
+
+    def update_slots(self, target, slots) -> None:
+        """O(changes) delta path: re-index exactly ``slots`` (values are
+        re-read from the target, so add/move/remove/tombstone all route
+        through here)."""
+        slots = np.unique(np.asarray(slots, np.int64))
+        if not len(slots):
+            return
+        act = np.asarray(target.active)
+        dele = getattr(target, "deleted", None)
+        present = act & ~np.asarray(dele) if dele is not None else act
+        ver = np.asarray(target.version).astype(np.int64)
+        ids = np.asarray(target.ids).astype(np.int64)
+        cent = np.asarray(target.centroid)
+        new_cell = self.grid.cell_of(cent[slots])
+        dirty: set = set()
+        grown = False
+        for s, c_new in zip(slots, new_cell):
+            s = int(s)
+            p = bool(present[s])
+            c_old = int(self._cell[s])
+            c_tgt = int(c_new) if p else -1
+            if c_old >= 0 and c_old != c_tgt:
+                self._drop_member(s, c_old)
+                dirty.add(c_old)
+            if c_tgt >= 0 and int(self._cell[s]) < 0:
+                if self._size[c_tgt] >= self.cell_cap:
+                    grown = True
+                    break
+                self._add_member(s, c_tgt)
+                dirty.add(c_tgt)
+            elif c_tgt >= 0:
+                dirty.add(c_tgt)          # in-place value change
+            self._present[s] = p
+            self._ver[s] = ver[s] if p else -1
+            self._oid[s] = ids[s] if p else 0
+        if grown:
+            self._grow_and_rebuild(target)
+            return
+        self._recompute(target, sorted(dirty))
+
+    def _add_member(self, s: int, c: int) -> None:
+        self._members[c, self._size[c]] = s
+        self._pos[s] = self._size[c]
+        self._size[c] += 1
+        self._cell[s] = c
+
+    def _drop_member(self, s: int, c: int) -> None:
+        last = self._size[c] - 1
+        p = int(self._pos[s])
+        moved = int(self._members[c, last])
+        self._members[c, p] = moved
+        self._pos[moved] = p
+        self._members[c, last] = -1
+        self._size[c] = last
+        self._cell[s] = -1
+
+    def _sorted_rows(self, cells) -> np.ndarray:
+        rows = self._members[cells].copy()
+        rows[rows < 0] = _SENTINEL
+        rows.sort(axis=1)
+        rows[rows == _SENTINEL] = -1
+        return rows
+
+    def _recompute(self, target, dirty: list) -> None:
+        """Dispatch the bucketed gather+reduce+scatter for dirty cells and
+        mirror their (sorted) member rows into the device table."""
+        if not dirty:
+            return
+        cols = _target_cols(target)
+        dirty = np.asarray(dirty, np.int64)
+        for lo in range(0, len(dirty), _CHUNK):
+            chunk = dirty[lo:lo + _CHUNK]
+            D = bucket(len(chunk))
+            cells = np.full((D,), -1, np.int32)
+            cells[:len(chunk)] = chunk
+            rows = np.full((D, self.cell_cap), -1, np.int32)
+            rows[:len(chunk)] = self._sorted_rows(chunk)
+            self.summaries = _apply_cells(self.summaries, cols,
+                                          jnp.asarray(cells),
+                                          jnp.asarray(rows),
+                                          cell_cap=self.cell_cap)
+            self.members = self.members.at[jnp.asarray(chunk)].set(
+                jnp.asarray(rows[:len(chunk)]))
+            self.updates += 1
+
+    def _grow_and_rebuild(self, target) -> None:
+        """Cell overflow: double cell_cap and re-index from the target —
+        the one from-scratch path, amortized over the map's lifetime."""
+        self.cell_cap *= 2
+        self.rebuilds += 1
+        M = self.grid.n_cells
+        self.summaries = _init_summaries(M, self.embed_dim)
+        self._members = np.full((M, self.cell_cap), -1, np.int32)
+        self.members = jnp.asarray(self._members)
+        self._size = np.zeros((M,), np.int32)
+        self._cell = np.full((self.capacity,), -1, np.int32)
+        self._pos = np.zeros((self.capacity,), np.int32)
+        self._present = np.zeros((self.capacity,), bool)
+        self._ver = np.full((self.capacity,), -1, np.int64)
+        self._oid = np.zeros((self.capacity,), np.int64)
+        self.refresh(target)
+
+
+def rebuilt(index: ClusterIndex, target) -> ClusterIndex:
+    """A fresh index over ``target`` with ``index``'s exact geometry — the
+    from-scratch oracle the churn property test compares against."""
+    out = ClusterIndex(grid=index.grid, embed_dim=index.embed_dim,
+                       capacity=index.capacity, cell_cap=index.cell_cap,
+                       min_flat_size=index.min_flat_size)
+    out.refresh(target)
+    return out
+
+
+def summaries_equal(a: ClusterSummaries, b: ClusterSummaries) -> bool:
+    """Bit-exact comparison (inf-aware via array_equal)."""
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(a, b))

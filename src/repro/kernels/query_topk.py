@@ -21,6 +21,12 @@ gather/compaction pass over the table.
 The block fold is a proper top-k merge: top-k of the block (sort-based,
 O(Nb log Nb) work on the VPU) then a [2k] merge with the running list.
 
+The same kernel shape serves BOTH levels of the hierarchical query plan
+(repro.index.search): stage 1 streams the [M, E] cluster-summary mean
+table with the conservative gate slack as bias (top-m cells by score
+upper bound), stage 2 streams the gathered member slab — so a two-stage
+query is two instances of this sweep at a fraction of the flat row count.
+
 Variants:
   * ``query_topk_bias_pallas``   — [Q, E] queries + [Q, N] bias (the engine
     entry point; the query batch is resident in VMEM, the table and bias

@@ -52,6 +52,10 @@ class FleetServer:
     grid: ZoneGrid
     budget: int = 64                   # per-client objects per tick per zone
     proto: bool = False                # fault-injection transport framing
+    index: bool = True                 # maintain per-zone cluster indexes
+    #                                    (repro.index; queries go two-stage
+    #                                     only past min_flat_size, so small
+    #                                     fleets keep flat-sweep results)
     zoned: ZoneShardedStore = None
     sessions: list = field(default_factory=list)   # one SessionManager/zone
     subscribed: np.ndarray = None      # [C, Z] bool (host mirror)
@@ -69,6 +73,8 @@ class FleetServer:
             self.zoned = ZoneShardedStore(knobs=self.knobs,
                                           embed_dim=self.embed_dim,
                                           grid=self.grid)
+        if self.index and not self.zoned.indexes:
+            self.zoned.enable_index()
         if not self.sessions:
             self.sessions = [
                 SessionManager(knobs=self.knobs, n_clients=self.n_clients,
@@ -283,8 +289,9 @@ class FleetServer:
 
         ``compile_query`` prunes shards from the spec's zone / near
         predicates before dispatch; each selected shard runs the same fused
-        predicate+score+top-k plan.  Result slots are global
-        ``zone * zone_capacity + shard_slot`` rows."""
+        predicate+score+top-k plan — coarse-to-fine through its cluster
+        index once the shard passes the engagement threshold.  Result slots
+        are global ``zone * zone_capacity + shard_slot`` rows."""
         return compile_query(spec, self.zoned,
                              use_pallas=use_pallas)(self.zoned)
 

@@ -138,6 +138,9 @@ class ZoneShardedStore:
     zone_capacity: int = 0
     max_points: int = 0
     zones: list = field(default_factory=list)
+    indexes: dict = field(default_factory=dict)  # zone -> ClusterIndex
+    #                                  (enable_index; core.query discovers
+    #                                   this attr for the two-stage plan)
     _dropped_oids: set = field(default_factory=set)  # refused by full shard
     _slot: list = field(default_factory=list)   # per zone: {oid -> slot}
     _ver: list = field(default_factory=list)    # per zone: copied version
@@ -225,7 +228,44 @@ class ZoneShardedStore:
                 db, dv = _pad_idx(freed, _bucket(max(len(freed), 1)))
                 self.zones[z] = _zone_scatter(self.zones[z], store, gb, sb,
                                               gv, db, dv)
+                # cluster-index maintenance rides the same delta: exactly
+                # the scattered + freed shard slots are re-indexed
+                zidx = self.indexes.get(z)
+                if zidx is not None:
+                    zidx.update_slots(self.zones[z], s_list + freed)
         return freed_per_zone, changed_per_zone
+
+    # ------------------------------------------------------------------
+    def enable_index(self, *, n_cells_target: int | None = None,
+                     cell_cap: int | None = None,
+                     min_flat_size: int | None = None) -> dict:
+        """Attach one incrementally-maintained ClusterIndex per zone shard
+        (repro.index) over the zone's own rectangle; from then on
+        ``refresh_from`` keeps them current and ``core.query`` plans the
+        coarse-to-fine two-stage sweep on any shard past
+        ``min_flat_size`` live objects."""
+        from repro.core.updates import bucket
+        from repro.index import ClusterIndex, DEFAULT_MIN_FLAT
+        from repro.index.cluster import CellGrid
+        if min_flat_size is None:
+            min_flat_size = DEFAULT_MIN_FLAT
+        capz = self.zone_capacity
+        if n_cells_target is None:
+            n_cells_target = min(max(capz // 256, 16), 16_384)
+        for z in range(self.grid.n_zones):
+            ix, iz = divmod(z, self.grid.nz)
+            x0 = self.grid.origin[0] + ix * self.grid.zone_size
+            z0 = self.grid.origin[1] + iz * self.grid.zone_size
+            cgrid = CellGrid.for_rect(x0, z0, self.grid.zone_size,
+                                      self.grid.zone_size, n_cells_target)
+            cc = cell_cap if cell_cap is not None else \
+                bucket(max(4 * capz // cgrid.n_cells, 16))
+            idx = ClusterIndex(grid=cgrid, embed_dim=self.embed_dim,
+                               capacity=capz, cell_cap=int(cc),
+                               min_flat_size=min_flat_size)
+            idx.refresh(self.zones[z])
+            self.indexes[z] = idx
+        return self.indexes
 
     # ------------------------------------------------------------------
     @property

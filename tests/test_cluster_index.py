@@ -1,0 +1,320 @@
+"""Cluster-summary index (repro.index): exactness of the coarse-to-fine
+query plan, bit-identity of incremental maintenance vs from-scratch
+rebuilds under random churn, tombstoned-member eviction, and byte-compat
+of the deprecated query wrappers through the index-aware compiler."""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.query import (Query, batched_query_local,
+                              batched_query_server, compile_query,
+                              execute_query, query_local, query_server)
+from repro.core.store import (clustered_synthetic_store, remove_objects,
+                              synthetic_store)
+from repro.index import (ClusterIndex, ClusterResult, rebuilt,
+                         summaries_equal)
+
+E = 64
+
+
+def _same_topk(a, b, *, rtol=1e-6, atol=1e-7):
+    assert np.array_equal(np.asarray(a.oids), np.asarray(b.oids))
+    assert np.array_equal(np.asarray(a.slots), np.asarray(b.slots))
+    np.testing.assert_allclose(np.asarray(a.scores), np.asarray(b.scores),
+                               rtol=rtol, atol=atol)
+
+
+def _store_and_index(n=4096, *, min_flat=1024, seed=0, **kw):
+    st = clustered_synthetic_store(n, n, E, 16, seed=seed, room=40.0,
+                                   n_hotspots=48)
+    idx = ClusterIndex.for_target(st, min_flat_size=min_flat, **kw)
+    assert idx.engaged()
+    return st, idx
+
+
+def _specs(st, n):
+    qe = st.embed[n // 3]
+    center = st.centroid[n // 3]
+    return {
+        "embed_only": Query(embed=qe, k=8),
+        "embed_spatial": Query(embed=qe,
+                               near=(center, jnp.asarray(5.0, jnp.float32)),
+                               prox_weight=jnp.asarray(0.3, jnp.float32),
+                               k=8),
+        "attrs": Query(embed=qe, labels=tuple(range(8)),
+                       min_points=jnp.asarray(4, jnp.int32),
+                       min_obs=jnp.asarray(1, jnp.int32), k=8),
+        "negated_sem": Query(embed=qe,
+                             sem_weight=jnp.asarray(-1.0, jnp.float32),
+                             k=8),
+    }
+
+
+# ---------------------------------------------------------------------------
+# two-stage plan exactness vs the flat sweep
+# ---------------------------------------------------------------------------
+def test_two_stage_matches_flat():
+    n = 4096
+    st, idx = _store_and_index(n)
+    for name, spec in _specs(st, n).items():
+        flat = compile_query(spec, st)(st)
+        two = compile_query(spec, st, index=idx)(st)
+        _same_topk(flat, two)
+
+
+def test_two_stage_matches_flat_batched():
+    n = 4096
+    st, idx = _store_and_index(n)
+    qs = st.embed[jnp.asarray([1, 7, n // 2, n - 3])]
+    spec = Query(embed=qs, k=8, batched=True)
+    _same_topk(compile_query(spec, st)(st),
+               compile_query(spec, st, index=idx)(st))
+
+
+def test_two_stage_pallas_parity():
+    """The stage-1 kernel path (interpret mode on CPU) agrees with XLA."""
+    n = 1024
+    st, idx = _store_and_index(n, min_flat=512)
+    spec = _specs(st, n)["embed_spatial"]
+    ref = compile_query(spec, st, index=idx)(st)
+    ker = compile_query(spec, st, use_pallas=True, index=idx)(st)
+    _same_topk(ref, ker, rtol=1e-5, atol=1e-6)
+
+
+def test_small_target_falls_back_flat():
+    st = clustered_synthetic_store(128, 128, E, 16, room=10.0)
+    idx = ClusterIndex.for_target(st)        # default min_flat: not engaged
+    assert not idx.engaged()
+    spec = Query(embed=st.embed[3], k=5)
+    _same_topk(compile_query(spec, st)(st),
+               compile_query(spec, st, index=idx)(st), rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# cluster-level mode: the summaries ARE the results
+# ---------------------------------------------------------------------------
+def test_cluster_level_query():
+    n = 4096
+    st, idx = _store_and_index(n)
+    spec = Query(embed=st.embed[n // 3],
+                 density_weight=jnp.asarray(0.5, jnp.float32),
+                 k=4, level="cluster")
+    res = compile_query(spec, st, index=idx)(st)
+    assert isinstance(res, ClusterResult)
+    s = np.asarray(res.scores)
+    assert s.shape == (4,) and np.all(np.diff(s) <= 0)      # sorted desc
+    assert (np.asarray(res.counts) > 0).all()
+    assert np.isfinite(np.asarray(res.centroids)).all()
+    # the winning cell's members really do sit near its reported centroid
+    top = int(np.asarray(res.cells)[0])
+    mem = idx.member_slots(top)
+    np.testing.assert_allclose(
+        np.asarray(st.centroid)[mem].mean(axis=0),
+        np.asarray(res.centroids)[0], atol=1e-4)
+
+
+def test_cluster_level_requires_index():
+    st = clustered_synthetic_store(256, 256, E, 16, room=10.0)
+    spec = Query(embed=st.embed[0], k=4, level="cluster")
+    with pytest.raises(ValueError):
+        compile_query(spec, st)(st)
+
+
+# ---------------------------------------------------------------------------
+# incremental maintenance == from-scratch rebuild (bit-exact)
+# ---------------------------------------------------------------------------
+def test_incremental_equals_rebuild_after_churn():
+    n = 2048
+    st, idx = _store_and_index(n, min_flat=512)
+    rng = np.random.default_rng(7)
+
+    # tombstone a batch
+    st = remove_objects(st, rng.choice(np.arange(1, n + 1), 200,
+                                       replace=False))
+    idx.refresh(st)
+    assert summaries_equal(idx.summaries, rebuilt(idx, st).summaries)
+
+    # move a batch across cells (version bump makes the diff see it)
+    slots = rng.choice(n, 150, replace=False)
+    cent = np.asarray(st.centroid).copy()
+    cent[slots] += rng.normal(scale=8.0, size=(150, 3)).astype(np.float32)
+    st = st._replace(centroid=jnp.asarray(cent),
+                     version=st.version.at[jnp.asarray(slots)].add(1))
+    idx.refresh(st)
+    assert summaries_equal(idx.summaries, rebuilt(idx, st).summaries)
+
+    # and the O(changes) delta path agrees with the diff path
+    idx.update_slots(st, np.arange(n))
+    assert summaries_equal(idx.summaries, rebuilt(idx, st).summaries)
+
+
+def test_tombstoned_members_evicted():
+    n = 1024
+    st, idx = _store_and_index(n, min_flat=256)
+    gone = np.arange(1, n + 1, 3)
+    st = remove_objects(st, gone)
+    idx.refresh(st)
+    live = set(np.nonzero(np.asarray(st.active)
+                          & ~np.asarray(st.deleted))[0].tolist())
+    members = set()
+    for c in range(idx.grid.n_cells):
+        members |= set(idx.member_slots(c).tolist())
+    assert members == live                  # no tombstone answers a query
+    assert idx.n_objects == len(live)
+
+
+def test_cell_overflow_auto_grows():
+    # everything lands in few cells with a tiny cap: must grow, not drop
+    st = synthetic_store(512, 512, E, 16, centroid_low=(-1, 0, -1),
+                         centroid_high=(1, 1, 1))
+    idx = ClusterIndex.for_target(st, n_cells_target=4, cell_cap=8,
+                                  min_flat_size=256)
+    assert idx.cell_cap > 8
+    assert summaries_equal(idx.summaries, rebuilt(idx, st).summaries)
+    spec = Query(embed=st.embed[11], k=6)
+    _same_topk(compile_query(spec, st)(st),
+               compile_query(spec, st, index=idx)(st))
+
+
+# ---------------------------------------------------------------------------
+# deprecated wrappers route through the index-aware compiler (byte compat)
+# ---------------------------------------------------------------------------
+def test_wrappers_byte_compat():
+    n = 2048
+    st, idx = _store_and_index(n, min_flat=512)
+    qe = st.embed[5]
+    qs = st.embed[jnp.asarray([5, 9, 100])]
+    carrier = SimpleNamespace(**st._asdict(), cluster_index=idx)
+
+    for target in (st, carrier):
+        with pytest.deprecated_call():
+            w = query_server(target, qe, k=7)
+        d = execute_query(target, Query(embed=qe, k=7))
+        _same_topk(w, d, rtol=0, atol=0)
+        with pytest.deprecated_call():
+            wb = batched_query_server(target, qs, k=7)
+        db = execute_query(target, Query(embed=qs, k=7, batched=True))
+        _same_topk(wb, db, rtol=0, atol=0)
+
+    # the index-carrying target really took the two-stage plan and still
+    # matches the plain flat sweep bit-for-bit on winners
+    _same_topk(execute_query(carrier, Query(embed=qe, k=7)),
+               execute_query(st, Query(embed=qe, k=7)))
+
+    # local-map shaped wrappers (no obs_count/last_seen columns)
+    lm = SimpleNamespace(ids=st.ids, active=st.active, embed=st.embed,
+                         label=st.label, n_points=st.n_points,
+                         centroid=st.centroid)
+    with pytest.deprecated_call():
+        w = query_local(lm, qe, k=7)
+    _same_topk(w, execute_query(lm, Query(embed=qe, k=7)), rtol=0, atol=0)
+    with pytest.deprecated_call():
+        w = batched_query_local(lm, qs, k=7)
+    _same_topk(w, execute_query(lm, Query(embed=qs, k=7, batched=True)),
+               rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# churn property: random spawn/move/remove/tombstone streams through the
+# full device-cloud loop; every tick the incrementally-maintained
+# summaries (server zone shards AND a device-local index) must be
+# bit-identical to a from-scratch rebuild, with tombstoned members evicted
+# ---------------------------------------------------------------------------
+def _assert_index_consistent(idx, target):
+    assert summaries_equal(idx.summaries, rebuilt(idx, target).summaries)
+    act = np.asarray(target.active)
+    dele = getattr(target, "deleted", None)
+    live = act & ~np.asarray(dele) if dele is not None else act
+    members = set()
+    for c in range(idx.grid.n_cells):
+        members |= set(idx.member_slots(c).tolist())
+    assert members == set(np.nonzero(live)[0].tolist())
+    assert idx.n_objects == int(live.sum())
+
+
+def _engine_with_index_checks(sc):
+    from repro.sim.engine import ScenarioEngine
+
+    eng = ScenarioEngine(sc)
+    # device-side index on client 0: ingest-fed via touched slots
+    eng.sessions[0].dev.enable_index(n_cells_target=4, min_flat_size=4)
+
+    def check(t):
+        for z, zidx in eng.server.zoned.indexes.items():
+            _assert_index_consistent(zidx, eng.server.zoned.zones[z])
+        dev = eng.sessions[0].dev
+        if dev.cluster_index is not None:
+            _assert_index_consistent(dev.cluster_index, dev.local)
+
+    eng.tick_hook = check
+    return eng
+
+
+def test_churn_deterministic_incremental_equals_rebuild():
+    """Seeded churn scenarios (spawn/move/remove/outage) through the full
+    device-cloud loop, index consistency asserted after EVERY tick — the
+    always-on arm of the hypothesis property below."""
+    from repro.sim.scenario import churn_scenario
+
+    for seed in (0, 3):
+        sc = churn_scenario(seed=seed, n_objects=16, n_ticks=10,
+                            n_clients=1, drain_ticks=3, spawn_late=2,
+                            query_prob=0.2)
+        _engine_with_index_checks(sc).run()
+
+
+@pytest.mark.slow
+def test_churn_property_incremental_equals_rebuild():
+    pytest.importorskip(
+        "hypothesis", reason="hypothesis not installed; property test skipped")
+    from hypothesis import given, settings, strategies as hst
+
+    from repro.core.knobs import Knobs
+    from repro.sim import (ClientSpec, NetTrace, ObjectEvent, PoseTrack,
+                           QueryPlan, Scenario)
+    from repro.sim.scenario import GridSpec
+
+    KN = Knobs(server_capacity=32, client_capacity=16,
+               max_object_points_server=16, max_object_points_client=8,
+               min_obs_before_sync=1)
+    N_TICKS = 8
+
+    @hst.composite
+    def scenarios(draw):
+        n_obj = draw(hst.integers(3, 8))
+        events = []
+        for oid in range(1, n_obj + 1):
+            events.append(ObjectEvent(
+                tick=draw(hst.integers(0, 2)), kind="spawn", oid=oid,
+                class_id=draw(hst.integers(0, 4)),
+                pos=(draw(hst.floats(-3, 3)), 1.0, draw(hst.floats(-3, 3))),
+                n_points=draw(hst.integers(4, 16))))
+        for oid in draw(hst.lists(hst.integers(1, n_obj), max_size=n_obj,
+                                  unique=True)):
+            events.append(ObjectEvent(tick=draw(hst.integers(3, N_TICKS - 1)),
+                                      kind="remove", oid=oid))
+        for oid in draw(hst.lists(hst.integers(1, n_obj), max_size=4,
+                                  unique=True)):
+            events.append(ObjectEvent(tick=draw(hst.integers(1, N_TICKS - 1)),
+                                      kind="move", oid=oid,
+                                      delta=(draw(hst.floats(-2, 2)), 0.0,
+                                             draw(hst.floats(-2, 2)))))
+        events.sort(key=lambda e: (e.tick, e.kind, e.oid))
+        return Scenario(seed=draw(hst.integers(0, 2**16)), n_ticks=N_TICKS,
+                        embed_dim=32, knobs=KN,
+                        grid=GridSpec(room=8.0, nx=2, nz=2), budget=16,
+                        clients=(ClientSpec(cid=0, net=NetTrace(),
+                                            track=PoseTrack(
+                                                anchor=(0.0, 1.5, 0.0)),
+                                            subscribe_radius=10.0),),
+                        events=tuple(events), query=QueryPlan(prob=0.2),
+                        drain_ticks=3)
+
+    @settings(max_examples=10, deadline=None)
+    @given(scenarios())
+    def inner(sc):
+        _engine_with_index_checks(sc).run()
+
+    inner()
