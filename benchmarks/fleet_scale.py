@@ -14,6 +14,13 @@ Per-client downstream bytes stay constant in C (each client receives the
 same changed set), which is the scaling story: downstream work ∝ per-client
 map changes, not fleet size.
 
+Tick latency is reported as exact p50/p95/p99/mean over every timed rep
+(folded through a ``repro.obs`` histogram, label C), not a single mean —
+tail behaviour is the serving story and a mean hides it.  The sweep runs
+to C=1024; the seed-architecture comparison loop (C sequential
+single-client collects) is measured up to C=256 and skipped above, where
+its Python loop would dominate the suite's wall clock.
+
 Writes BENCH_fleet_scale.json via ``benchmarks/run.py --suite fleet_scale
 --json``; smoke mode (CI) runs C ∈ {1, 2} at tiny shapes.
 """
@@ -30,12 +37,32 @@ from repro.core.knobs import Knobs
 from repro.core.store import synthetic_store
 from repro.core.updates import collect_updates, init_sync
 from repro.core.local_map import compute_priority
+from repro.obs import metrics as obs_metrics
 from repro.server.session import SessionManager
+
+SEED_LOOP_MAX_C = 256      # the C-iteration Python loop above this is
+#                            minutes of wall clock for a known-linear curve
+
+
+def _time_samples(fn, *, reps: int, warmup: int = 3,
+                  rounds: int = 3) -> list:
+    """Per-call wall-time samples (ms) over ``rounds`` x ``reps`` calls —
+    the container's wall clock is noisy enough (CPU scaling, GC) that a
+    single mean can be 5-10x off; keeping every sample gives exact
+    nearest-rank percentiles instead."""
+    for _ in range(warmup):
+        fn()
+    out = []
+    for _ in range(rounds):
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            out.append((time.perf_counter() - t0) * 1e3)
+    return out
 
 
 def _time(fn, *, reps: int, warmup: int = 3) -> float:
-    """Best-of-3 mean over ``reps`` calls — the container's wall clock is
-    noisy enough (CPU scaling, GC) that a single mean can be 5-10x off."""
+    """Best-of-3 mean (legacy single-number path, kept for seed_loop)."""
     for _ in range(warmup):
         fn()
     best = float("inf")
@@ -52,10 +79,10 @@ def run(full: bool = False, smoke: bool = False):
         sweep, n_obj, cap, E, P, budget, reps = [1, 2], 24, 64, 32, 32, 16, 3
     elif full:
         sweep, n_obj, cap, E, P, budget, reps = \
-            [1, 8, 64, 256], 256, 512, 256, 512, 32, 10
+            [1, 8, 64, 256, 512, 1024], 256, 512, 256, 512, 32, 10
     else:
         sweep, n_obj, cap, E, P, budget, reps = \
-            [1, 8, 64, 256], 128, 256, 128, 256, 32, 10
+            [1, 8, 64, 256, 512, 1024], 128, 256, 128, 256, 32, 10
     kn = Knobs(server_capacity=cap, client_capacity=max(budget * 2, 64),
                max_object_points_server=P,
                max_object_points_client=max(P // 4, 16),
@@ -64,6 +91,9 @@ def run(full: bool = False, smoke: bool = False):
 
     results = {"map_objects": n_obj, "capacity": cap, "embed_dim": E,
                "budget": budget, "sweep": {}}
+    reg = obs_metrics.get_registry() or obs_metrics.MetricsRegistry()
+    hist = reg.histogram("fleet_tick_ms",
+                         "fleet collect tick wall time by fleet size")
     lat_by_c = {}
     for C in sweep:
         sm = SessionManager(knobs=kn, n_clients=C, capacity=cap,
@@ -77,35 +107,56 @@ def run(full: bool = False, smoke: bool = False):
             pkt = sm.collect(store)
             return pkt
 
-        ms = _time(tick_once, reps=reps)
+        # big fleets get fewer reps: one rep is slow enough to be stable
+        c_reps = reps if C <= 256 else max(reps // 3, 2)
+        samples = _time_samples(tick_once, reps=c_reps)
+        for s in samples:
+            hist.observe(s, C=C)
+        pct = obs_metrics.exact_percentiles(samples)
+        ms = pct["p50"]
         pkt = tick_once()
         per_client_b = float(pkt.nbytes.mean())
 
-        # seed architecture at identical shapes: a Python loop of C
-        # single-client collect_updates calls
-        pri = np.asarray(compute_priority(
-            store.embed, store.label, store.centroid,
-            user_pos=jnp.zeros(3), knobs=kn))
-
-        def seed_loop():
-            for _ in range(C):
-                p, _ = collect_updates(store, init_sync(cap), kn, tick=0,
-                                       priorities=pri, max_updates=budget)
-            jax.block_until_ready(p.batch.n_points)
-
-        seed_ms = _time(seed_loop, reps=max(reps // 2, 2))
         lat_by_c[C] = ms
-        results["sweep"][str(C)] = {
-            "tick_ms": ms,
-            "seed_loop_ms": seed_ms,
-            "speedup_vs_seed": seed_ms / max(ms, 1e-9),
+        row = {
+            "tick_ms": ms,                  # p50 (gate-compared key)
+            "tick_ms_p95": pct["p95"],
+            "tick_ms_p99": pct["p99"],
+            "tick_ms_mean": pct["mean"],
+            "tick_samples": pct["n"],
             "per_client_bytes": per_client_b,
             "objects_per_client": float(pkt.counts.mean()),
         }
+
+        if C <= SEED_LOOP_MAX_C:
+            # seed architecture at identical shapes: a Python loop of C
+            # single-client collect_updates calls
+            pri = np.asarray(compute_priority(
+                store.embed, store.label, store.centroid,
+                user_pos=jnp.zeros(3), knobs=kn))
+
+            def seed_loop():
+                for _ in range(C):
+                    p, _ = collect_updates(store, init_sync(cap), kn,
+                                           tick=0, priorities=pri,
+                                           max_updates=budget)
+                jax.block_until_ready(p.batch.n_points)
+
+            seed_ms = _time(seed_loop, reps=max(reps // 2, 2))
+            row["seed_loop_ms"] = seed_ms
+            row["speedup_vs_seed"] = seed_ms / max(ms, 1e-9)
+            extra = (f"seed_loop={seed_ms:.2f}ms;"
+                     f"speedup={seed_ms / max(ms, 1e-9):.2f}x;")
+        else:
+            extra = "seed_loop=skipped;"
+        results["sweep"][str(C)] = row
         csv_row(f"fleet_tick[C={C}]", ms * 1e3,
-                f"seed_loop={seed_ms:.2f}ms;"
-                f"speedup={seed_ms / max(ms, 1e-9):.2f}x;"
+                extra + f"p99={pct['p99']:.2f}ms;"
                 f"bytes/client={per_client_b:.0f}")
+
+    # bucketed summaries from the obs histogram (what a live deployment
+    # would scrape), alongside the exact sample percentiles above
+    results["tick_ms_hist"] = {str(C): hist.summary(C=C) for C in sweep}
 
     c_lo, c_hi = sweep[0], (64 if 64 in lat_by_c else sweep[-1])
     growth = lat_by_c[c_hi] / max(lat_by_c[c_lo], 1e-9)

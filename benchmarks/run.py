@@ -16,7 +16,7 @@ sys.path.insert(0, str(ROOT))
 from benchmarks import (downstream_bw, fault_tolerance, fleet_scale,
                         ingest_tick, local_map_scale, mapping_latency,
                         power_model, query_engine, query_latency, roofline,
-                        scenario_suite, upstream_bw)
+                        scenario_suite, serving_loop, upstream_bw)
 
 SUITES = {
     "tab4_fig3_mapping": mapping_latency.run,
@@ -28,6 +28,7 @@ SUITES = {
     "roofline": roofline.run,
     "ingest_tick": ingest_tick.run,
     "fleet_scale": fleet_scale.run,
+    "serving_loop": serving_loop.run,
     "query_engine": query_engine.run,
     "scenario_suite": scenario_suite.run,
     "fault_tolerance": fault_tolerance.run,

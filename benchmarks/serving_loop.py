@@ -1,0 +1,219 @@
+"""Serving-loop benchmark: synchronous vs overlapped tick at fleet scale.
+
+Two arms run the IDENTICAL seeded workload (same ingest deltas, same pose
+streams, same open-loop query arrivals from ``serving.loadgen``) through
+``serving.loop.ServingLoop``:
+
+- **sync** — today's driver schedule: fence after every dispatch family,
+  non-donated functional ingest (XLA copies the full store per tick).
+- **overlapped** — async dispatch end to end: donated in-place ingest
+  against the double-buffered store's dead generation, issue-all-then-
+  finish zone collects (packet framing deferred one tick — legal because
+  the sync state chains on-device), non-blocking query steps resolved
+  once per tick.
+
+Because both arms serve every query against the post-previous-tick
+snapshot, their per-query results, per-tick sync packets, and final
+stores are byte-identical — asserted here, so the speedup is a pure
+scheduling + allocation win at EQUAL output.  Headline: overlapped/sync
+throughput at C=256 (target >= 1.5x) plus — new with this suite —
+p50/p95/p99 query wait and end-to-end latency under load, and the
+donated-vs-copy ingest microbenchmark.
+
+The default shape is the paper's regime: a LARGE resident map (131k
+server slots — the hierarchical-index PR's scale axis) with bounded
+per-tick churn, so the synchronous arm's O(capacity) functional-update
+copy dominates its tick while the overlapped arm's donated scatter is
+O(churn).  That copy-elision term is host-parallelism-independent; on
+multi-core hosts the dispatch pipelining (collect/query overlap) adds on
+top, but it contributes ~nothing on the 1-core CI runner — measured and
+documented in EXPERIMENTS.md, not assumed.
+
+Golden-replay purity rides along: the scenario engine replayed with
+``async_loop=True`` must produce a bit-identical MetricsLog.
+
+Writes BENCH_serving_loop.json via ``benchmarks/run.py --suite
+serving_loop --json``; smoke mode (CI) runs C=8 at tiny shapes.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from benchmarks.common import csv_row
+from repro.core.knobs import Knobs
+from repro.core.store import SnapshotStore, copy_store, synthetic_store
+from repro.obs import metrics as obs_metrics
+from repro.serving.loadgen import LoadGenerator, LoadSpec
+from repro.serving.loop import (IngestStream, ServingLoop, apply_delta,
+                                _apply_delta_donated)
+from repro.server.fleet import FleetServer
+from repro.server.zones import ZoneGrid, ZoneShardedStore
+
+
+def _build(cfg: dict, *, overlap: bool) -> ServingLoop:
+    kn = Knobs(server_capacity=cfg["cap"],
+               client_capacity=max(cfg["budget"] * 2, 64),
+               max_object_points_server=cfg["P"],
+               max_object_points_client=max(cfg["P"] // 8, 8),
+               min_obs_before_sync=1)
+    store = synthetic_store(cfg["n_live"], cfg["cap"], cfg["E"], cfg["P"],
+                            seed=7, centroid_low=(-7.0, 0.0, -7.0),
+                            centroid_high=(7.0, 2.0, 7.0))
+    grid = ZoneGrid.for_room(16.0, cfg["nz"], cfg["nz"])
+    # zone shards are sized to the LIVE population (plus headroom), not
+    # the server store's slot capacity: the default 2*cap/Z headroom
+    # would make every per-zone collect scan mostly-empty slots
+    zoned = ZoneShardedStore(knobs=kn, embed_dim=cfg["E"], grid=grid,
+                             zone_capacity=cfg.get("zcap", 0))
+    # per-zone cluster indexes serve core.query's shard planning, which
+    # the serving query path (flat sweep over the publish buffer) never
+    # touches — keep them off so both arms measure the serving loop only.
+    # Session (collect) donation stays OFF in BOTH arms: dispatching a jit
+    # that donates a buffer blocks the host until that buffer's producer
+    # retires, so donated collects re-serialize the very chain the
+    # deferred tick_start/tick_finish pipeline exists to overlap.  Ingest
+    # donation is unaffected (ServingLoop's _apply_delta_donated donates a
+    # generation whose producer finished a full tick earlier).
+    srv = FleetServer(knobs=kn, embed_dim=cfg["E"], n_clients=cfg["C"],
+                      grid=grid, budget=cfg["budget"], donate=False,
+                      index=False, zoned=zoned)
+    lg = LoadGenerator(LoadSpec(n_clients=cfg["C"], n_ticks=cfg["ticks"],
+                                base_hz=cfg["base_hz"],
+                                burst_hz=cfg["burst_hz"]),
+                       embed_dim=cfg["E"])
+    ing = IngestStream(n_ticks=cfg["ticks"], n_live=cfg["n_live"],
+                       embed_dim=cfg["E"], max_points=cfg["P"],
+                       churn=cfg["churn"], seed=11)
+    snap = SnapshotStore.of(store) if overlap \
+        else SnapshotStore(front=store)
+    for c in range(cfg["C"]):
+        srv.join(c, lg.pose_at(c, 0), 6.0)
+    return ServingLoop(server=srv, store=snap, ingest=ing, loadgen=lg,
+                       overlap=overlap, batch_size=cfg["batch"],
+                       max_batches_per_tick=cfg["max_batches"])
+
+
+def _arm(cfg: dict, *, overlap: bool) -> tuple:
+    # warmup run compiles this arm's jits (donated variants are distinct
+    # executables) so the measured run times steady-state dispatch
+    warm_cfg = dict(cfg, ticks=min(6, cfg["ticks"]))
+    _build(warm_cfg, overlap=overlap).run(warm_cfg["ticks"])
+    loop = _build(cfg, overlap=overlap)
+    stats = loop.run(cfg["ticks"])
+    return loop, stats
+
+
+def _donation_microbench(cfg: dict, reps: int = 20) -> dict:
+    """Ingest scatter, copy vs donated in-place, same delta same store."""
+    store = synthetic_store(cfg["n_live"], cfg["cap"], cfg["E"], cfg["P"],
+                            seed=7)
+    d = IngestStream(n_ticks=2, n_live=cfg["n_live"], embed_dim=cfg["E"],
+                     max_points=cfg["P"], churn=cfg["churn"],
+                     seed=11).delta_at(0)
+    jax.block_until_ready(apply_delta(store, d).active)       # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(apply_delta(store, d).active)
+    copy_ms = (time.perf_counter() - t0) / reps * 1e3
+
+    ping = copy_store(store)
+    ping = _apply_delta_donated(ping, d)                      # compile
+    jax.block_until_ready(ping.active)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        ping = _apply_delta_donated(ping, d)
+    jax.block_until_ready(ping.active)
+    donated_ms = (time.perf_counter() - t0) / reps * 1e3
+    return {"copy_ingest_ms": copy_ms, "donated_ingest_ms": donated_ms,
+            "savings_x": copy_ms / max(donated_ms, 1e-9)}
+
+
+def _golden_replay_pure() -> bool:
+    from repro.sim import churn_scenario, run_scenario
+    sc = churn_scenario(seed=23, n_objects=20, n_ticks=20, n_clients=3,
+                        remove_frac=0.25, drain_ticks=8)
+    return run_scenario(sc).equals(run_scenario(sc, async_loop=True))
+
+
+def run(full: bool = False, smoke: bool = False):
+    if smoke:
+        cfg = dict(C=8, ticks=24, n_live=96, cap=128, E=32, P=16, nz=2,
+                   churn=16, budget=16, batch=8, max_batches=2,
+                   base_hz=2.0, burst_hz=20.0)
+    else:
+        # paper-regime shape: 131k-slot resident map (the index PR's scale
+        # axis), 4k live objects, bounded churn — the synchronous arm's
+        # functional update copies the full ~280 MB store every tick while
+        # the overlapped arm's donated scatter touches only churned rows
+        cfg = dict(C=256, ticks=120, n_live=4096, cap=131072, E=128, P=128,
+                   nz=1, zcap=6144, churn=96, budget=32, batch=4,
+                   max_batches=2, base_hz=1.0, burst_hz=8.0)
+        if full:
+            cfg.update(ticks=240)
+
+    results = {"config": cfg, "arms": {}}
+    sync_loop, sync_stats = _arm(cfg, overlap=False)
+    ovl_loop, ovl_stats = _arm(cfg, overlap=True)
+    results["arms"]["sync"] = sync_stats
+    results["arms"]["overlapped"] = ovl_stats
+
+    # -- equal-output checks: the speedup must not buy different answers --
+    same_rids = set(sync_loop.results) == set(ovl_loop.results)
+    same_rows = same_rids and all(
+        np.array_equal(sync_loop.results[r].oids, ovl_loop.results[r].oids)
+        and np.array_equal(sync_loop.results[r].scores,
+                           ovl_loop.results[r].scores)
+        for r in sync_loop.results)
+    store_eq = all(
+        a is None and b is None
+        or np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(sync_loop.store.front, ovl_loop.store.front))
+    results["query_results_equal"] = bool(same_rows)
+    results["final_store_equal"] = bool(store_eq)
+    results["sent_bytes_equal"] = \
+        sync_stats["sent_bytes_total"] == ovl_stats["sent_bytes_total"]
+
+    speedup = ovl_stats["ticks_per_s"] / max(sync_stats["ticks_per_s"],
+                                             1e-9)
+    results["overlap_speedup_x"] = speedup
+    if not smoke:
+        # full-scale acceptance only: at C=8 smoke shapes the tick is
+        # dispatch-bound and the ratio is noise, so the smoke gate SKIPs
+        results["overlap_speedup_ge_1_5"] = bool(speedup >= 1.5)
+
+    # p99 query latency under load — reported for the first time
+    e2e = ovl_stats["e2e_ms"]
+    results["p99_under_load_ms"] = e2e["p99"]
+    results["p99_under_load_ok"] = bool(
+        e2e["n"] == ovl_stats["n_queries_served"] and e2e["n"] > 0
+        and np.isfinite(e2e["p99"]))
+
+    results["donation"] = _donation_microbench(cfg)
+    results["golden_replay_bit_identical"] = _golden_replay_pure()
+
+    csv_row("serving_tick_sync", sync_stats["tick_ms"]["p50"] * 1e3,
+            f"p99={sync_stats['tick_ms']['p99']:.2f}ms;"
+            f"tps={sync_stats['ticks_per_s']:.1f}")
+    csv_row("serving_tick_overlapped", ovl_stats["tick_ms"]["p50"] * 1e3,
+            f"p99={ovl_stats['tick_ms']['p99']:.2f}ms;"
+            f"tps={ovl_stats['ticks_per_s']:.1f};"
+            f"speedup={speedup:.2f}x;equal={bool(same_rows and store_eq)}")
+    csv_row("serving_query_e2e_p99", e2e["p99"] * 1e3,
+            f"n={e2e['n']};wait_p99={ovl_stats['wait_ms']['p99']:.2f}ms")
+    csv_row("ingest_donation", results["donation"]["donated_ingest_ms"]
+            * 1e3, f"copy={results['donation']['copy_ingest_ms']:.2f}ms;"
+            f"savings={results['donation']['savings_x']:.1f}x")
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(full=args.full, smoke=args.smoke)

@@ -82,6 +82,15 @@ class MappingServer:
     embedder: OracleEmbedder
     mode: str = "semanticxr"        # "baseline" | "parallel" | "semanticxr"
     instrument: bool = False        # semanticxr: staged timings vs one dispatch
+    donate: bool = False            # donate the store to the fused ingest
+    #                                 dispatch: the pre-frame store is dead
+    #                                 once process_frame rebinds self.store,
+    #                                 so XLA updates the [cap, ...] arrays in
+    #                                 place instead of copying them per
+    #                                 keyframe.  Opt-in: callers that hold a
+    #                                 pre-frame store reference (snapshot
+    #                                 readers, ablation oracles) must stay
+    #                                 on the copying path.
     store: ObjectStore = None
     frame_count: int = 0
     deferred: int = 0
@@ -132,7 +141,8 @@ class MappingServer:
             return assoc.prune_transients(st, frame=frame,
                                           min_obs=kn.min_obs_before_sync)
 
-        self._ingest = jax.jit(ingest_frame)
+        self._ingest = jax.jit(ingest_frame, donate_argnums=(0,)) \
+            if self.donate else jax.jit(ingest_frame)
 
     # ------------------------------------------------------------------
     def _detect(self, frame: Frame, classes: dict):

@@ -148,9 +148,16 @@ class PowerModel:
 
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
-def _client_fns(knobs: Knobs, use_pallas: bool):
+def _client_fns(knobs: Knobs, use_pallas: bool, donate: bool = False):
     """Jitted device-side functions, shared by every DeviceClient with the
-    same knobs — a C-client fleet compiles each step once, not C times."""
+    same knobs — a C-client fleet compiles each step once, not C times.
+
+    ``donate=True`` donates the LocalMap argument of the batched ingest:
+    the pre-ingest map is dead once ``DeviceClient.ingest`` rebinds
+    ``self.local``, so apply_updates_batch writes the new map in place
+    instead of allocating a full copy per packet.  Byte-identical results
+    (tests/test_serving_loop.py); opt-in because oracle tests re-apply
+    packets to a saved pre-ingest map."""
     def query(m, e):           # LQ: the declarative engine's fused dispatch
         return query_mod.execute_query(
             m, query_mod.Query(embed=e, k=5), use_pallas=use_pallas)
@@ -163,7 +170,9 @@ def _client_fns(knobs: Knobs, use_pallas: bool):
         # (map, touched slots [U]) — the slots feed cluster-index
         # maintenance when the client has one enabled
         return apply_updates_batch_slots(m, batch, pri)
-    return query, apply_one, jax.jit(_ingest_fn)
+    ingest = jax.jit(_ingest_fn, donate_argnums=(0,)) if donate \
+        else jax.jit(_ingest_fn)
+    return query, apply_one, ingest
 
 
 @dataclass
@@ -172,6 +181,8 @@ class DeviceClient:
     embed_dim: int
     local: LocalMap = None
     use_pallas: bool = False
+    donate: bool = False               # in-place batched ingest (the old
+    #                                    map is donated; see _client_fns)
     cluster_index: object = None       # repro.index.ClusterIndex | None
     # measured stats
     lq_count: int = 0
@@ -181,7 +192,7 @@ class DeviceClient:
         if self.local is None:
             self.local = init_local_map(self.knobs, self.embed_dim)
         self._query, self._apply, self._ingest = _client_fns(
-            self.knobs, self.use_pallas)
+            self.knobs, self.use_pallas, self.donate)
 
     def enable_index(self, **kw) -> None:
         """Attach a cluster-summary index over the local map; from then on

@@ -19,6 +19,7 @@ the deletion.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import NamedTuple
 
 import numpy as np
@@ -162,6 +163,77 @@ def clustered_synthetic_store(n: int, capacity: int, embed_dim: int,
 
 def n_active(store: ObjectStore) -> jax.Array:
     return store.active.sum()
+
+
+# ---------------------------------------------------------------------------
+# Double-buffered store for the overlapped serving loop (serving/loop.py).
+#
+# JAX buffer donation makes functional updates in-place: the donated
+# input's buffers are overwritten by the outputs.  That is exactly what a
+# concurrent reader must never observe — so the serving loop keeps TWO
+# generations.  ``front`` is the published snapshot every query / zone
+# refresh reads; ``back`` is the previous generation, dead to all new
+# dispatches, and therefore safe to donate to the next ingest scatter.
+# Publishing is a host-side pointer swap (atomic under the GIL), so a
+# reader sees exactly the pre-tick or the post-tick store, never a torn
+# mix; dispatches already in flight against the old front are protected by
+# the runtime's buffer usage tracking (a donated buffer's writes are
+# sequenced after its outstanding reads).
+# ---------------------------------------------------------------------------
+_copy_store = jax.jit(lambda s: jax.tree.map(jnp.copy, s))
+
+
+def copy_store(store: ObjectStore) -> ObjectStore:
+    """Deep device copy (fresh buffers) — the second generation seed."""
+    return _copy_store(store)
+
+
+@dataclass
+class SnapshotStore:
+    """Two-generation ObjectStore with snapshot versioning.
+
+    Protocol (one serving tick)::
+
+        scratch = snap.take_back()                  # dead gen t-1 buffers
+        new = ingest(scratch_donated, snap.pending, delta_t)   # catch up
+        ... issue sync + query dispatches against snap.front ...
+        snap.publish(new, pending=delta_t)          # swap; version += 1
+
+    The donated ingest applies ``pending`` (the delta that produced the
+    current front) and then this tick's delta, so the two-tick-old back
+    buffer catches up in O(changed rows) without ever copying the full
+    store — the donation saving the serving benchmark measures.
+    ``version`` is the publish counter: a reader pairs it with the
+    snapshot it grabbed to tell pre-tick from post-tick results.
+    """
+    front: ObjectStore
+    back: ObjectStore | None = None
+    version: int = 0
+    pending: object = None       # delta that produced front from back
+
+    @classmethod
+    def of(cls, store: ObjectStore) -> "SnapshotStore":
+        return cls(front=store, back=copy_store(store))
+
+    def snapshot(self) -> tuple:
+        """(published store, publish version) — consistent by construction."""
+        return self.front, self.version
+
+    def take_back(self) -> ObjectStore:
+        """Hand out the dead generation for donation (once per tick)."""
+        assert self.back is not None, \
+            "take_back called twice without an intervening publish"
+        b = self.back
+        self.back = None
+        return b
+
+    def publish(self, new_front: ObjectStore, *, pending=None) -> None:
+        """Swap: the current front becomes the next donation target."""
+        assert self.back is None, "publish without take_back"
+        self.back = self.front
+        self.front = new_front
+        self.pending = pending
+        self.version += 1
 
 
 def store_nbytes(store: ObjectStore) -> int:

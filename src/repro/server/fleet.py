@@ -52,6 +52,9 @@ class FleetServer:
     grid: ZoneGrid
     budget: int = 64                   # per-client objects per tick per zone
     proto: bool = False                # fault-injection transport framing
+    donate: bool = False               # sessions donate their [C, N] sync
+    #                                    state to the collect dispatch
+    #                                    (in-place advance; byte-identical)
     index: bool = True                 # maintain per-zone cluster indexes
     #                                    (repro.index; queries go two-stage
     #                                     only past min_flat_size, so small
@@ -80,6 +83,7 @@ class FleetServer:
                 SessionManager(knobs=self.knobs, n_clients=self.n_clients,
                                capacity=self.zoned.zone_capacity,
                                budget=self.budget, proto=self.proto,
+                               donate=self.donate,
                                subscribed=np.zeros((self.n_clients,), bool))
                 for _ in range(self.grid.n_zones)]
         if self.subscribed is None:
@@ -120,6 +124,24 @@ class FleetServer:
                 # stream survives: no epoch bump for a mere zone crossing.
                 self.sessions[z].reset_client(c, keep_seq=True)
             self.sessions[z].set_client(c, user_pos=pos, subscribed=subs[z])
+
+    def set_poses(self, poses: np.ndarray, radius: float) -> None:
+        """Whole-fleet pose update: one [C, Z] broadcast subscription test
+        + per-zone array writes, semantically identical to C
+        ``set_client_pose`` calls (the 60 FPS pose-stream hot path — the
+        per-client loop is ~C*Z Python iterations per tick)."""
+        poses = np.asarray(poses, np.float32)
+        subs = self.zoned.grid.overlaps_batch(poses, radius)   # [C, Z]
+        left = self.subscribed & ~subs
+        changed = self.subscribed != subs
+        self.subscribed = subs
+        for z, sess in enumerate(self.sessions):
+            for c in np.nonzero(left[:, z])[0]:
+                sess.reset_client(int(c), keep_seq=True)   # zone exit
+            if changed[:, z].any():
+                sess.dirty = True                          # membership
+            sess.subscribed[:] = subs[:, z]
+            sess.user_pos[:] = poses
 
     def _bump_epoch(self, c: int, *, fresh: bool):
         """Advance the client's sync epoch.  fresh=True restarts the whole
@@ -181,6 +203,30 @@ class FleetServer:
                         "cumulative acks applied").inc(client=int(c),
                                                        zone=int(zone))
 
+    def ack_tick(self, packets: list, *, tick: int) -> int:
+        """Batched ack of one tick's own packets — the always-connected
+        fleet fast path (the serving loop's clients apply every delivered
+        packet immediately).  Equivalent to ``ack(c, z, epoch[c], seq)``
+        per framed client but without the per-call epoch lookup: these
+        seqs were just issued under the CURRENT epochs, so none can be
+        stale.  Returns the number of (client, zone) acks applied."""
+        n = 0
+        acked = np.zeros((self.n_clients,), bool)
+        for z, pkt in packets:
+            sess = self.sessions[z]
+            for c in np.nonzero(pkt.seqs >= 0)[0]:
+                sess.ack(int(c), int(pkt.seqs[c]))
+            acked[pkt.seqs >= 0] = True
+            n += int((pkt.seqs >= 0).sum())
+        if acked.any():
+            self.epoch_fresh[acked] = False
+            self.last_ack_tick[acked] = tick
+        reg = obs_metrics.get_registry()
+        if reg is not None and n:
+            reg.counter("fleet_acks_total",
+                        "cumulative acks applied").inc(n, batched=1)
+        return n
+
     def request_resync(self, c: int):
         """Client detected an unrecoverable gap: roll it back to its acked
         state under a bumped epoch (its reorder buffers restart too)."""
@@ -239,14 +285,39 @@ class FleetServer:
         return blocked
 
     # -- hot path ------------------------------------------------------------
-    def tick(self, deliverable: np.ndarray, *, tick: int | None = None) -> list:
+    def tick(self, deliverable: np.ndarray, *, tick: int | None = None,
+             overlap: bool = False) -> list:
         """One fleet update tick: one vmapped collect per DIRTY zone that
         has a deliverable subscriber.  A zone is clean (skipped outright)
         when its last collect covered every subscriber and shipped nothing,
         and no refresh/join/subscription change has touched it since —
         idle-tick cost scales with changed zones, not zone count.  Returns
         [(zone, FleetPacket)] — per-client packets are leading-dim views.
+
+        ``overlap=True`` issues every dirty zone's collect dispatch first
+        and only then materializes the packets (collect_start/finish):
+        zone k's host bookkeeping overlaps zone k+1's device compute
+        instead of fencing per zone.  Zones are independent (per-zone
+        sessions, server state only read), so the packets are byte-
+        identical to the sequential path — asserted in tests.
         """
+        if overlap:
+            return self.tick_finish(self.tick_start(deliverable, tick=tick))
+        self._epoch_catchup(deliverable, tick)
+        out = []
+        with obs_span("fleet.tick", cat="sync") as sp:
+            zs = [z for z, sess in enumerate(self.sessions)
+                  if sess.dirty and (sess.subscribed & deliverable).any()]
+            out = [(z, self.sessions[z].collect(
+                self.zoned.zones[z], deliverable=deliverable, zone=z,
+                epoch=self.epoch, fresh=self.epoch_fresh, now=tick))
+                for z in zs]
+            sp.set(zones_collected=len(out))
+        self._tick_metrics(out)
+        return out
+
+    def _epoch_catchup(self, deliverable: np.ndarray,
+                       tick: int | None) -> None:
         pend = self.needs_fresh & np.asarray(deliverable, bool) \
             & self.subscribed.any(axis=1)
         for c in np.nonzero(pend)[0]:
@@ -256,18 +327,36 @@ class FleetServer:
             self.last_ack_tick[c] = self.sessions[0].tick if tick is None \
                 else tick
             self.needs_fresh[c] = False
-        out = []
-        with obs_span("fleet.tick", cat="sync") as sp:
-            for z, sess in enumerate(self.sessions):
-                if not sess.dirty or not (sess.subscribed
-                                          & deliverable).any():
-                    continue
-                out.append((z, sess.collect(self.zoned.zones[z],
-                                            deliverable=deliverable, zone=z,
-                                            epoch=self.epoch,
-                                            fresh=self.epoch_fresh,
-                                            now=tick)))
-            sp.set(zones_collected=len(out))
+
+    def tick_start(self, deliverable: np.ndarray, *,
+                   tick: int | None = None) -> list:
+        """Issue every dirty zone's collect dispatch; return [(zone,
+        _PendingCollect)] for ``tick_finish``.  The fully-pipelined serving
+        loop finishes these a TICK later: the sync state (synced_version +
+        ever_sent) lives on-device, so the next tick's collects chain off
+        these dispatches with no host dependency on the framing."""
+        deliverable = np.asarray(deliverable, bool)
+        self._epoch_catchup(deliverable, tick)
+        with obs_span("fleet.tick_start", cat="sync") as sp:
+            started = [(z, self.sessions[z].collect_start(
+                self.zoned.zones[z], deliverable=deliverable, zone=z,
+                epoch=self.epoch, fresh=self.epoch_fresh, now=tick))
+                for z, sess in enumerate(self.sessions)
+                if sess.dirty and (sess.subscribed & deliverable).any()]
+            sp.set(zones_collected=len(started))
+        return started
+
+    def tick_finish(self, started: list) -> list:
+        """Frame issued collects into packets (host transfers + seq/
+        in-flight bookkeeping), in issue order — byte-identical to the
+        sequential path."""
+        with obs_span("fleet.tick_finish", cat="sync"):
+            out = [(z, self.sessions[z].collect_finish(p))
+                   for z, p in started]
+        self._tick_metrics(out)
+        return out
+
+    def _tick_metrics(self, out: list) -> None:
         reg = obs_metrics.get_registry()
         if reg is not None and out:
             cnt = reg.counter("fleet_sent_bytes_total",
@@ -275,7 +364,6 @@ class FleetServer:
             for z, pkt in out:
                 for c in np.nonzero(pkt.nbytes)[0]:
                     cnt.inc(int(pkt.nbytes[c]), client=int(c), zone=int(z))
-        return out
 
     def per_client_nbytes(self, packets: list) -> np.ndarray:
         total = np.zeros((self.n_clients,), np.int64)

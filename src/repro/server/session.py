@@ -43,8 +43,12 @@ from repro.core.updates import (_HEADER_B, PROTO_HEADER_NBYTES,
 
 
 class FleetSync(NamedTuple):
-    """Stacked per-client sync vectors: last shipped version per store slot."""
-    synced_version: jax.Array    # [C, N] int32
+    """Stacked per-client sync state, all device-resident so consecutive
+    collects chain through dispatch order alone — no host round-trip
+    between a tick's collect and the next tick's (the overlapped serving
+    loop defers packet framing a full tick on the strength of this)."""
+    synced_version: jax.Array    # [C, N] int32 — last shipped version
+    ever_sent: jax.Array = None  # [C, N] bool — row was EVER shipped
 
 
 class FleetBatch(NamedTuple):
@@ -80,13 +84,12 @@ def _downsample_gather(points: jax.Array, n_points: jax.Array,
     return jnp.where(valid[..., None], out, 0.0), n_out
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("budget", "points_budget", "knobs"))
-def _collect_fleet(store: ObjectStore, synced: jax.Array,
-                   ever_sent: jax.Array, mask_c: jax.Array,
-                   min_obs: jax.Array, user_pos: jax.Array,
-                   interest_embeds, class_budgets: jax.Array, *,
-                   budget: int, points_budget: int, knobs: Knobs):
+def _collect_fleet_impl(store: ObjectStore, synced: jax.Array,
+                        ever_sent: jax.Array, clear_mask: jax.Array,
+                        mask_c: jax.Array,
+                        min_obs: jax.Array, user_pos: jax.Array,
+                        interest_embeds, class_budgets: jax.Array, *,
+                        budget: int, points_budget: int, knobs: Knobs):
     """One update tick for the whole fleet in a single dispatch.
 
     ``class_budgets`` [256] is the per-class client point budget table
@@ -94,10 +97,16 @@ def _collect_fleet(store: ObjectStore, synced: jax.Array,
     ``Knobs.class_point_overrides`` row-by-row exactly like the
     single-client gather.
 
-    Returns (FleetBatch, new_synced [C, N], nbytes [C], counts [C],
-    idx [C, U] — the store slots behind each packet row, for the
-    sender's in-flight/ack bookkeeping).
+    Returns (FleetBatch, new_synced [C, N], new_ever [C, N], nbytes [C],
+    counts [C], idx [C, U] — the store slots behind each packet row, for
+    the sender's in-flight/ack bookkeeping).
     """
+    # slots freed since the last collect (reset_slots) clear INSIDE the
+    # dispatch: the [N] mask rides in as 1 KB of host data instead of two
+    # eager [C, N] where-ops materializing fresh sync arrays every free —
+    # the kernel already streams synced/ever_sent, so the fold is free
+    synced = jnp.where(clear_mask[None], 0, synced)
+    ever_sent = jnp.where(clear_mask[None], False, ever_sent)
     dele = deleted_mask(store)
     live = (store.active[None]
             & (store.obs_count[None] >= min_obs[:, None])
@@ -139,6 +148,11 @@ def _collect_fleet(store: ObjectStore, synced: jax.Array,
             synced, shipped, store.version[idx])
     # fully-empty slots must not pin a stale synced version on any client
     new_synced = jnp.where((store.active | dele)[None], new_synced, 0)
+    # the sent-gate updates INSIDE the dispatch so consecutive collects
+    # chain on-device (no empty-slot clearing here: only reset_slots /
+    # reset_client may forget a shipped row, exactly like the host mirror)
+    new_ever = jax.vmap(lambda e, i: e.at[i].set(True, mode="drop"))(
+        ever_sent, shipped)
 
     E = store.embed.shape[1]
     n_live = jnp.where(valid, n, 0)
@@ -146,7 +160,41 @@ def _collect_fleet(store: ObjectStore, synced: jax.Array,
     n_tomb = row_del.sum(axis=-1).astype(jnp.int32)
     nbytes = ((counts - n_tomb) * (_HEADER_B + 2 * E)
               + 6 * n_live.sum(axis=-1) + n_tomb * TOMBSTONE_NBYTES)
-    return batch, new_synced, nbytes, counts, idx
+    return batch, new_synced, new_ever, nbytes, counts, idx
+
+
+_COLLECT_STATICS = ("budget", "points_budget", "knobs")
+_collect_fleet = functools.partial(
+    jax.jit, static_argnames=_COLLECT_STATICS)(_collect_fleet_impl)
+# Donating variant: the [C, N] sync-state array is dead the moment the
+# dispatch is issued (the session rebinds to new_synced), so XLA may write
+# new_synced in place instead of allocating + copying a fresh [C, N] every
+# tick.  Byte-identical to the non-donating path (tests/test_serving_loop);
+# opt-in via SessionManager(donate=True) because callers that keep their
+# own reference to synced_version (oracle tests, benchmarks that reset the
+# sync state from a saved array) would read a deleted buffer.
+_collect_fleet_donated = jax.jit(_collect_fleet_impl, donate_argnums=(1, 2),
+                                 static_argnames=_COLLECT_STATICS)
+
+
+class _PendingCollect(NamedTuple):
+    """An issued-but-unresolved collect dispatch: device handles plus the
+    host-side context ``collect_finish`` needs.  Between issue and finish
+    the caller is free to dispatch other work (the overlapped loop issues
+    every zone's collect, then ingest and queries, before materializing
+    any counts) — nothing here forces a device sync."""
+    batch: FleetBatch
+    nbytes: jax.Array     # [C] device
+    counts: jax.Array     # [C] device
+    idx: jax.Array        # [C, U] device
+    mask: np.ndarray      # [C] bool — subscribed & deliverable at issue
+    zone: int
+    epoch: np.ndarray
+    fresh: np.ndarray
+    now: int | None
+    scrub: np.ndarray = None   # [N] bool — slots freed AFTER issue; their
+    #                            rows must not enter in-flight/ever_sent
+    #                            bookkeeping at finish (deferred pipeline)
 
 
 @dataclass
@@ -230,6 +278,9 @@ class SessionManager:
     #                                    shipped nothing (fleet quiesced)
     proto: bool = False                # fault-injection transport on: count
     #                                    framing bytes + checksum packets
+    donate: bool = False               # donate the [C, N] sync state to the
+    #                                    collect dispatch (in-place advance;
+    #                                    see _collect_fleet_donated)
     acked: np.ndarray = None           # [C, N] int32 — versions each client
     #                                    has CONFIRMED applying (cumulative
     #                                    acks); trails sync, drives slot
@@ -248,7 +299,13 @@ class SessionManager:
         C, N = self.n_clients, self.capacity
         self.budget = min(self.budget, N)
         if self.sync is None:
-            self.sync = FleetSync(jnp.zeros((C, N), jnp.int32))
+            self.sync = FleetSync(jnp.zeros((C, N), jnp.int32),
+                                  jnp.zeros((C, N), bool))
+        elif self.sync.ever_sent is None:
+            self.sync = self.sync._replace(
+                ever_sent=jnp.asarray(self.ever_sent)
+                if self.ever_sent is not None
+                else jnp.zeros((C, N), bool))
         if self.subscribed is None:
             self.subscribed = np.ones((C,), bool)
         if self.user_pos is None:
@@ -264,6 +321,10 @@ class SessionManager:
             self.inflight = [deque() for _ in range(C)]
         if self.ever_sent is None:
             self.ever_sent = np.zeros((C, N), bool)
+        self._open_scrubs = []      # scrub masks of issued, unfinished collects
+        # [N] bool — slots freed since the last collect; the next collect
+        # dispatch zeroes their synced/ever_sent columns in-kernel
+        self._pending_clear = np.zeros((N,), bool)
         self._class_budgets = jnp.asarray(class_budget_table(self.knobs))
 
     # -- per-client knob management (control plane, off the hot path) ------
@@ -289,7 +350,8 @@ class SessionManager:
         survive the subscription gap (only epoch bumps may restart seqs,
         because only they reset the client's expected-seq counters)."""
         self.dirty = True
-        self.sync = FleetSync(self.sync.synced_version.at[c].set(0))
+        self.sync = FleetSync(self.sync.synced_version.at[c].set(0),
+                              self.sync.ever_sent.at[c].set(False))
         self.acked[c] = 0
         self.ever_sent[c] = False
         self.inflight[c].clear()
@@ -305,14 +367,29 @@ class SessionManager:
         if len(slots):
             self.dirty = True
             sl = np.asarray(slots)
-            self.sync = FleetSync(
-                self.sync.synced_version.at[:, sl].set(0))
+            # O(1) slot-membership lookup instead of np.isin (a sort) per
+            # in-flight entry — this runs per freed zone per tick, over
+            # every un-acked packet of every client, and dominated the
+            # serving tick at C=256 before the rewrite
+            hit = np.zeros((self.capacity,), bool)
+            hit[sl] = True
+            # the DEVICE clear is deferred: the [N] mask accumulates on the
+            # host and the next collect dispatch applies it first thing
+            # (see _collect_fleet_impl) — nothing reads the device sync
+            # state between here and that collect, and eagerly clearing
+            # costs two [C, N] materializations per freed zone per tick
+            self._pending_clear |= hit
             self.acked[:, sl] = 0
             self.ever_sent[:, sl] = False
+            # collects issued but not yet framed (deferred pipeline) must
+            # not resurrect these slots in their finish-time bookkeeping
+            for m in self._open_scrubs:
+                m[sl] = True
             for q in self.inflight:
                 for k, (seq, tk, islots, ivers) in enumerate(q):
-                    keep = ~np.isin(islots, sl)
-                    if not keep.all():
+                    drop = hit[islots]
+                    if drop.any():
+                        keep = ~drop
                         q[k] = (seq, tk, islots[keep], ivers[keep])
 
     # -- ack / resync bookkeeping (hardened protocol control plane) --------
@@ -338,8 +415,9 @@ class SessionManager:
         later tombstone would be suppressed (sent-gated) and the client
         kept a ghost object with no deletion debt blocking its slot."""
         self.dirty = True
-        self.sync = FleetSync(
-            self.sync.synced_version.at[c].set(jnp.asarray(self.acked[c])))
+        self.sync = self.sync._replace(
+            synced_version=self.sync.synced_version.at[c].set(
+                jnp.asarray(self.acked[c])))
         self.inflight[c].clear()
         self.next_seq[c] = 0
 
@@ -360,6 +438,92 @@ class SessionManager:
         return dele[None] & self.ever_sent & (self.acked < ver[None])
 
     # -- hot path ----------------------------------------------------------
+    def collect_start(self, store: ObjectStore, *,
+                      deliverable: np.ndarray | None = None, zone: int = 0,
+                      epoch: np.ndarray | None = None,
+                      fresh: np.ndarray | None = None,
+                      now: int | None = None) -> _PendingCollect:
+        """Issue the fleet collect dispatch; return device handles.
+
+        This is the async half of ``collect``: the `_collect_fleet` jit is
+        dispatched (donating the old sync state when ``donate``), the sync
+        vector is rebound to the new device array, and NO host transfer
+        happens — the caller overlaps other dispatch families before
+        ``collect_finish`` materializes counts and does seq bookkeeping."""
+        mask = self.subscribed if deliverable is None \
+            else self.subscribed & np.asarray(deliverable, bool)
+        fn = _collect_fleet_donated if self.donate else _collect_fleet
+        clear = jnp.asarray(self._pending_clear)
+        self._pending_clear = np.zeros((self.capacity,), bool)
+        with obs_span("session.collect_fleet", cat="sync", zone=zone) as sp:
+            batch, new_synced, new_ever, nbytes, counts, idx = fn(
+                store, self.sync.synced_version, self.sync.ever_sent,
+                clear, jnp.asarray(mask),
+                jnp.asarray(self.min_obs), jnp.asarray(self.user_pos),
+                self.interest_embeds, self._class_budgets, budget=self.budget,
+                points_budget=self.knobs.max_object_points_client,
+                knobs=self.knobs)
+            sp.fence(batch.valid)
+        self.sync = FleetSync(new_synced, new_ever)
+        # the collect consumes the dirty flag; finish (or any event in
+        # between — refresh marks, subscription changes) re-raises it
+        self.dirty = False
+        scrub = np.zeros((self.capacity,), bool)
+        self._open_scrubs.append(scrub)
+        return _PendingCollect(batch=batch, nbytes=nbytes, counts=counts,
+                               idx=idx, mask=mask, zone=zone, epoch=epoch,
+                               fresh=fresh, now=now, scrub=scrub)
+
+    def collect_finish(self, p: _PendingCollect) -> FleetPacket:
+        """Materialize an issued collect: host transfer + seq/in-flight
+        bookkeeping.  Finishing in issue order keeps the packets
+        byte-identical to the sequential ``collect`` path."""
+        batch = p.batch
+        counts = np.asarray(p.counts)
+        nbytes = np.asarray(p.nbytes).astype(np.int64)
+        seqs = np.full((self.n_clients,), -1, np.int64)
+        if counts.any():
+            idx_h = np.asarray(p.idx)
+            valid_h = np.asarray(batch.valid)
+            vers_h = np.asarray(batch.version)
+            stamp = self.tick if p.now is None else p.now
+            scrubbed = p.scrub is not None and p.scrub.any()
+            for c in np.nonzero(counts)[0]:
+                seqs[c] = self.next_seq[c]
+                self.next_seq[c] += 1
+                v = valid_h[c]
+                sl, vv = idx_h[c][v], vers_h[c][v]
+                if scrubbed:
+                    # slots freed after issue (deferred finish): the packet
+                    # still ships as computed, but its rows must not enter
+                    # retirement bookkeeping — a later occupant of the slot
+                    # would inherit the predecessor's send/ack state
+                    keep = ~p.scrub[sl]
+                    sl, vv = sl[keep], vv[keep]
+                self.inflight[c].append((int(seqs[c]), stamp, sl, vv))
+                self.ever_sent[c, sl] = True
+            if self.proto:
+                nbytes[counts > 0] += PROTO_HEADER_NBYTES
+        pkt = FleetPacket(batch=batch, counts=counts, nbytes=nbytes,
+                          tick=self.tick, zone=p.zone, seqs=seqs,
+                          epoch=np.zeros((self.n_clients,), np.int64)
+                          if p.epoch is None
+                          else np.asarray(p.epoch, np.int64),
+                          fresh=np.zeros((self.n_clients,), bool)
+                          if p.fresh is None else np.asarray(p.fresh, bool),
+                          proto=self.proto)
+        self.tick += 1
+        if p.scrub is not None:
+            self._open_scrubs = [m for m in self._open_scrubs
+                                 if m is not p.scrub]
+        # quiesced iff every subscriber was covered and nothing shipped (a
+        # partial-coverage tick may still owe undeliverable clients); OR —
+        # not assign — so marks raised between a deferred issue and this
+        # finish (refresh, slot churn, subscription moves) survive
+        self.dirty = (self.dirty or bool(pkt.counts.any())
+                      or not (p.mask == self.subscribed).all())
+        return pkt
+
     def collect(self, store: ObjectStore, *,
                 deliverable: np.ndarray | None = None, zone: int = 0,
                 epoch: np.ndarray | None = None,
@@ -372,45 +536,6 @@ class SessionManager:
         queued in-flight until the client's cumulative ack lands — the
         sync vector records what was SENT, ``acked`` what was CONFIRMED,
         and slot retirement trusts only the latter."""
-        mask = self.subscribed if deliverable is None \
-            else self.subscribed & np.asarray(deliverable, bool)
-        with obs_span("session.collect_fleet", cat="sync", zone=zone) as sp:
-            batch, new_synced, nbytes, counts, idx = _collect_fleet(
-                store, self.sync.synced_version, jnp.asarray(self.ever_sent),
-                jnp.asarray(mask),
-                jnp.asarray(self.min_obs), jnp.asarray(self.user_pos),
-                self.interest_embeds, self._class_budgets, budget=self.budget,
-                points_budget=self.knobs.max_object_points_client,
-                knobs=self.knobs)
-            sp.fence(batch.valid)
-        self.sync = FleetSync(new_synced)
-        counts = np.asarray(counts)
-        nbytes = np.asarray(nbytes).astype(np.int64)
-        seqs = np.full((self.n_clients,), -1, np.int64)
-        if counts.any():
-            idx_h = np.asarray(idx)
-            valid_h = np.asarray(batch.valid)
-            vers_h = np.asarray(batch.version)
-            stamp = self.tick if now is None else now
-            for c in np.nonzero(counts)[0]:
-                seqs[c] = self.next_seq[c]
-                self.next_seq[c] += 1
-                v = valid_h[c]
-                self.inflight[c].append((int(seqs[c]), stamp,
-                                         idx_h[c][v], vers_h[c][v]))
-                self.ever_sent[c, idx_h[c][v]] = True
-            if self.proto:
-                nbytes[counts > 0] += PROTO_HEADER_NBYTES
-        pkt = FleetPacket(batch=batch, counts=counts, nbytes=nbytes,
-                          tick=self.tick, zone=zone, seqs=seqs,
-                          epoch=np.zeros((self.n_clients,), np.int64)
-                          if epoch is None else np.asarray(epoch, np.int64),
-                          fresh=np.zeros((self.n_clients,), bool)
-                          if fresh is None else np.asarray(fresh, bool),
-                          proto=self.proto)
-        self.tick += 1
-        # quiesced iff every subscriber was covered and nothing shipped
-        # (a partial-coverage tick may still owe undeliverable clients)
-        self.dirty = bool(pkt.counts.any()) or not (mask ==
-                                                    self.subscribed).all()
-        return pkt
+        return self.collect_finish(self.collect_start(
+            store, deliverable=deliverable, zone=zone, epoch=epoch,
+            fresh=fresh, now=now))

@@ -88,6 +88,36 @@ class ZoneGrid:
                     out[ix * self.nz + iz] = True
         return out
 
+    def _zone_rects(self):
+        """[Z] rectangle bounds (x0, x1, z0, z1) in zone-id order, border
+        zones extended to infinity — cached: the grid is frozen."""
+        r = getattr(self, "_rects", None)
+        if r is None:
+            inf = float("inf")
+            ix, iz = np.divmod(np.arange(self.n_zones), self.nz)
+            x0 = self.origin[0] + ix * self.zone_size
+            z0 = self.origin[1] + iz * self.zone_size
+            x1, z1 = x0 + self.zone_size, z0 + self.zone_size
+            x0 = np.where(ix == 0, -inf, x0)
+            x1 = np.where(ix == self.nx - 1, inf, x1)
+            z0 = np.where(iz == 0, -inf, z0)
+            z1 = np.where(iz == self.nz - 1, inf, z1)
+            r = (x0, x1, z0, z1)
+            object.__setattr__(self, "_rects", r)
+        return r
+
+    def overlaps_batch(self, poses: np.ndarray, radius) -> np.ndarray:
+        """[C, 3] poses -> [C, Z] bool, identical to per-client ``overlaps``
+        but one broadcast circle-rectangle test instead of a C * Z Python
+        loop (the fleet pose-update hot path at C=256+)."""
+        p = np.atleast_2d(np.asarray(poses, np.float64))
+        x0, x1, z0, z1 = self._zone_rects()
+        cx = np.clip(p[:, 0:1], x0[None], x1[None])        # [C, Z]
+        cz = np.clip(p[:, 2:3], z0[None], z1[None])
+        d2 = (cx - p[:, 0:1]) ** 2 + (cz - p[:, 2:3]) ** 2
+        r = np.asarray(radius, np.float64).reshape(-1, 1)
+        return d2 <= r ** 2
+
 
 @jax.jit
 def _zone_scatter(zone: ObjectStore, src: ObjectStore, g_idx: jax.Array,

@@ -91,8 +91,49 @@ class BatchScheduler:
         return self.done
 
 
+class PendingResult:
+    """A query result whose dispatch has been issued but not materialized.
+
+    ``make_query_step_fn(block=False)`` stores one of these per request in
+    ``BatchScheduler.done``: the whole group's batched QueryResult stays a
+    device array, and the serving loop resolves rows after its per-tick
+    fence instead of forcing a host sync inside the scheduler step (which
+    would serialize query dispatch with ingest/sync compute).  ``resolve``
+    is idempotent and returns exactly what the blocking path would have."""
+
+    __slots__ = ("_res", "_i", "_legacy", "_out")
+
+    def __init__(self, res, i: int, legacy: bool):
+        self._res, self._i, self._legacy = res, i, legacy
+        self._out = None
+
+    def resolve(self):
+        if self._out is None:
+            from repro.core.query import QueryResult
+            i = self._i
+            oids = np.asarray(self._res.oids[i])
+            scores = np.asarray(self._res.scores[i])
+            if self._legacy:
+                self._out = (int(oids[0]), float(scores[0]))
+            else:
+                self._out = QueryResult(oids=oids, scores=scores,
+                                        slots=np.asarray(self._res.slots[i]))
+            self._res = None           # release the batched device arrays
+        return self._out
+
+
+def resolve_results(done: dict) -> dict:
+    """Materialize every PendingResult in a scheduler's ``done`` dict (in
+    place) — the drain step of the overlapped serving loop."""
+    for rid, r in done.items():
+        if isinstance(r, PendingResult):
+            done[rid] = r.resolve()
+    return done
+
+
 def make_query_step_fn(get_map, *, k: int = 5, use_pallas: bool = False,
-                       pad_to: int | None = None):
+                       pad_to: int | None = None, block: bool = True,
+                       get_index=None):
     """Build a BatchScheduler ``step_fn`` over the declarative query engine.
 
     Payloads are ``core.query.Query`` specs — semantic, spatial, and
@@ -117,6 +158,15 @@ def make_query_step_fn(get_map, *, k: int = 5, use_pallas: bool = False,
     Returns, in payload order: ``(oid, score)`` of the top hit for legacy
     embedding payloads, or the request's full ``QueryResult`` row (numpy)
     for Query payloads.
+
+    ``block=False`` returns ``PendingResult`` handles instead: the fused
+    dispatch is issued but no host transfer happens inside the step — the
+    overlapped serving loop fences once per tick and ``resolve``s then.
+
+    ``get_index`` (optional) returns the current cluster index over the
+    map, re-read every step like ``get_map`` — the serving loop keeps its
+    index maintained against the PUBLISH buffer, so a two-stage plan is
+    exact against the same snapshot the flat sweep would scan.
     """
     import jax
     import jax.numpy as jnp
@@ -126,6 +176,7 @@ def make_query_step_fn(get_map, *, k: int = 5, use_pallas: bool = False,
 
     def step_fn(payloads: list) -> list:
         m = get_map()
+        index = get_index() if get_index is not None else None
         legacy = [not isinstance(p, Query) for p in payloads]
         specs = [Query(embed=jnp.asarray(p), k=k) if leg else p
                  for p, leg in zip(payloads, legacy)]
@@ -140,7 +191,12 @@ def make_query_step_fn(get_map, *, k: int = 5, use_pallas: bool = False,
             width = max(pad_to or 0, q)
             batched = stack_queries([specs[p] for p in positions],
                                     pad_to=width)
-            res = execute_query(m, batched, use_pallas=use_pallas)
+            res = execute_query(m, batched, use_pallas=use_pallas,
+                                index=index)
+            if not block:
+                for i, pos in enumerate(positions):
+                    results[pos] = PendingResult(res, i, legacy[pos])
+                continue
             oids = np.asarray(res.oids)
             scores = np.asarray(res.scores)
             slots = np.asarray(res.slots)

@@ -223,6 +223,12 @@ class ScenarioEngine:
     embedder: object = None            # query-side embeddings (mapper path)
     query_hook: object = None
     tick_hook: object = None
+    async_loop: bool = False           # overlapped server tick: issue every
+    #                                    dirty zone's collect before any
+    #                                    packet materializes, with the sync
+    #                                    state donated.  Replay stays bit-
+    #                                    identical (asserted in tests) —
+    #                                    only the dispatch schedule changes.
     power: PowerModel = field(default_factory=PowerModel)
     # built state (exposed for wrappers/tests)
     server: FleetServer = None
@@ -244,7 +250,8 @@ class ScenarioEngine:
                                       embed_dim=sc.embed_dim,
                                       n_clients=len(sc.clients), grid=grid,
                                       budget=sc.budget,
-                                      proto=self._hardened)
+                                      proto=self._hardened,
+                                      donate=self.async_loop)
         if self.mapper is None and self.world is None:
             self.world = WorldState(knobs=sc.knobs, embed_dim=sc.embed_dim,
                                     seed=sc.seed)
@@ -405,7 +412,8 @@ class ScenarioEngine:
                 retx = sc.faults.retx_ticks if sc.faults is not None else 3
                 self.server.maintain(tick=i, deliverable=deliverable,
                                      retx_ticks=retx)
-            packets = self.server.tick(deliverable, tick=i)
+            packets = self.server.tick(deliverable, tick=i,
+                                       overlap=self.async_loop)
             sent = self.server.per_client_nbytes(packets)
             from repro.core.updates import TOMBSTONE_NBYTES
             tomb_sent = np.zeros(C, np.int64)

@@ -398,3 +398,35 @@ def test_bench_fleet_scale_smoke():
     # both clients receive identical bytes (same subscription, same map)
     b = [r["per_client_bytes"] for r in res["sweep"].values()]
     assert b[0] == b[1]
+
+
+def test_ack_tick_parity_with_per_client_acks():
+    """The serving loop's batched same-tick ack (FleetServer.ack_tick) must
+    leave the server in exactly the state of routing each framed client's
+    ack through the per-client path (FleetServer.ack) — acked vectors,
+    drained inflight queues, epoch freshness, and lease bookkeeping."""
+    def build():
+        srv = FleetServer(knobs=KN, embed_dim=E, n_clients=4,
+                          grid=ZoneGrid.for_room(8.0, 2, 1), budget=8)
+        rng = np.random.default_rng(3)
+        for c in range(4):
+            srv.join(c, rng.uniform(-3, 3, size=3).astype(np.float32), 6.0)
+        srv.refresh(synth_store(24))
+        return srv
+
+    deliverable = np.ones((4,), bool)
+    a, b = build(), build()
+    for t in range(3):
+        pk_a = a.tick(deliverable, tick=t)
+        pk_b = b.tick(deliverable, tick=t)
+        a.ack_tick(pk_a, tick=t)
+        for z, pkt in pk_b:
+            for c in np.nonzero(pkt.seqs >= 0)[0]:
+                b.ack(int(c), int(z), int(pkt.epoch[c]), int(pkt.seqs[c]),
+                      tick=t)
+    for sa, sb in zip(a.sessions, b.sessions):
+        assert np.array_equal(sa.acked, sb.acked)
+        assert all(len(q) == 0 for q in sa.inflight)
+        assert all(len(q) == 0 for q in sb.inflight)
+    assert np.array_equal(a.epoch_fresh, b.epoch_fresh)
+    assert np.array_equal(a.last_ack_tick, b.last_ack_tick)

@@ -1,0 +1,369 @@
+"""Async pipelined serving loop: double-buffer consistency, donation
+byte-identity, and sync-vs-overlapped output equality.
+
+The overlap is only legal because it is UNOBSERVABLE: every test here pins
+some facet of that — a query racing a donated in-place ingest must see
+exactly the pre- or post-tick snapshot (never a torn mix), donated jits
+must produce byte-identical outputs to their copying twins, and the whole
+loop (and the scenario engine under ``async_loop=True``) must replay
+bit-identically against the synchronous schedule.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.knobs import Knobs
+from repro.core.query import Query, execute_query
+from repro.core.store import (SnapshotStore, copy_store, synthetic_store)
+from repro.serving.loadgen import LoadGenerator, LoadSpec
+from repro.serving.loop import (IngestStream, ServingLoop, apply_delta,
+                                _apply_delta_donated, _apply_delta2_donated)
+from repro.server.fleet import FleetServer
+from repro.server.zones import ZoneGrid
+
+E, P, CAP, NLIVE = 32, 16, 128, 96
+
+KN = Knobs(server_capacity=CAP, client_capacity=64,
+           max_object_points_server=P, max_object_points_client=8,
+           min_obs_before_sync=1)
+
+
+def _store(seed=1):
+    return synthetic_store(NLIVE, CAP, E, P, seed=seed)
+
+
+def _stream(n_ticks=6, seed=3, **kw):
+    kw.setdefault("churn", 24)
+    return IngestStream(n_ticks=n_ticks, n_live=NLIVE, embed_dim=E,
+                        max_points=P, seed=seed, **kw)
+
+
+def _oracle_topk(store, q, k):
+    """Numpy flat-sweep oracle over a host snapshot: active slots only,
+    cosine score, descending."""
+    act = np.asarray(store.active)
+    sim = np.asarray(store.embed) @ np.asarray(q)
+    sim[~act] = -np.inf
+    order = np.argsort(-sim)[:k]
+    return np.asarray(store.ids)[order], sim[order]
+
+
+def _stores_equal(a, b):
+    return all(
+        (x is None and y is None)
+        or np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(a, b))
+
+
+# ---------------------------------------------------------------------------
+# double-buffer consistency: a query racing the donated ingest sees a
+# consistent snapshot
+# ---------------------------------------------------------------------------
+def test_mid_ingest_query_is_exactly_pre_tick_snapshot():
+    snap = SnapshotStore.of(_store())
+    stream = _stream()
+    d = stream.delta_at(0)
+    pre_host = jax.tree.map(np.asarray, snap.front)       # pre-tick oracle
+    post = apply_delta(copy_store(snap.front), d)         # post-tick oracle
+    post_host = jax.tree.map(np.asarray, post)
+
+    # aim the query at a slot this delta re-embeds, so pre and post top-k
+    # actually differ — a torn read could not pass both arms below
+    slot = int(np.asarray(d.slots)[np.argmin(np.asarray(d.tomb))])
+    q = np.asarray(d.embed)[np.argmin(np.asarray(d.tomb))]
+    pre_ids, pre_sc = _oracle_topk(pre_host, q, 5)
+    post_ids, post_sc = _oracle_topk(post_host, q, 5)
+    assert int(post_host.ids[slot]) == int(post_ids[0])
+    assert not np.array_equal(pre_sc, post_sc)
+
+    # in-flight donated ingest: the back buffer is being overwritten NOW
+    back = snap.take_back()
+    new = _apply_delta_donated(back, d)
+    mid = execute_query(snap.front, Query(embed=jnp.asarray(q), k=5))
+    assert np.array_equal(np.asarray(mid.oids), pre_ids)
+    np.testing.assert_allclose(np.asarray(mid.scores), pre_sc, atol=1e-5)
+
+    snap.publish(new, pending=d)
+    after = execute_query(snap.front, Query(embed=jnp.asarray(q), k=5))
+    assert np.array_equal(np.asarray(after.oids), post_ids)
+    np.testing.assert_allclose(np.asarray(after.scores), post_sc,
+                               atol=1e-5)
+
+
+def test_tombstone_during_query_pre_or_post_never_mixed():
+    snap = SnapshotStore.of(_store())
+    # hand-built delta: tombstone the store's best match for q
+    q = np.asarray(snap.front.embed[7])
+    pre_host = jax.tree.map(np.asarray, snap.front)
+    pre_ids, _ = _oracle_topk(pre_host, q, 3)
+    victim_slot = 7
+    assert int(pre_host.ids[victim_slot]) == int(pre_ids[0])
+    U = _stream().delta_at(0).slots.shape[0]
+    d = _stream().delta_at(0)._replace(
+        slots=jnp.zeros((U,), jnp.int32).at[0].set(victim_slot),
+        tomb=jnp.zeros((U,), bool).at[0].set(True),
+        valid=jnp.zeros((U,), bool).at[0].set(True))
+
+    back = snap.take_back()
+    new = _apply_delta_donated(back, d)
+    mid = execute_query(snap.front, Query(embed=jnp.asarray(q), k=3))
+    # mid-removal: the victim is still the top hit of the published snap
+    assert int(np.asarray(mid.oids)[0]) == int(pre_ids[0])
+
+    snap.publish(new, pending=d)
+    post = execute_query(snap.front, Query(embed=jnp.asarray(q), k=3))
+    post_host = jax.tree.map(np.asarray, snap.front)
+    post_ids, _ = _oracle_topk(post_host, q, 3)
+    assert int(pre_ids[0]) not in np.asarray(post.oids)
+    assert np.array_equal(np.asarray(post.oids), post_ids)
+
+
+def test_snapshot_store_protocol_guards():
+    snap = SnapshotStore.of(_store())
+    b = snap.take_back()
+    with pytest.raises(AssertionError):
+        snap.take_back()
+    snap.publish(b)
+    assert snap.version == 1
+    with pytest.raises(AssertionError):
+        snap.publish(b)
+
+
+# ---------------------------------------------------------------------------
+# donation byte-identity: donated jits are scheduling-only changes
+# ---------------------------------------------------------------------------
+def test_donated_ingest_chain_matches_copying_chain():
+    stream = _stream(n_ticks=5)
+    ref = _store()
+    for t in range(5):
+        ref = apply_delta(ref, stream.delta_at(t))
+    ref = jax.tree.map(np.asarray, ref)
+
+    # double-buffered donated chain with the pending-delta catch-up: the
+    # two-tick-old buffer replays (pending, current) each tick
+    snap = SnapshotStore.of(_store())
+    for t in range(5):
+        d = stream.delta_at(t)
+        back = snap.take_back()
+        new = _apply_delta_donated(back, d) if snap.pending is None \
+            else _apply_delta2_donated(back, snap.pending, d)
+        snap.publish(new, pending=d)
+    assert _stores_equal(ref, jax.tree.map(np.asarray, snap.front))
+
+
+def test_collect_donation_byte_identity():
+    from repro.server.session import SessionManager
+    store = _store()
+    sub = np.ones((4,), bool)
+    a = SessionManager(knobs=KN, n_clients=4, capacity=CAP, budget=16,
+                      subscribed=sub.copy())
+    b = SessionManager(knobs=KN, n_clients=4, capacity=CAP, budget=16,
+                      donate=True, subscribed=sub.copy())
+    for tick in range(3):
+        pa = a.collect(store)
+        pb = b.collect_finish(b.collect_start(store))
+        assert np.array_equal(pa.nbytes, pb.nbytes)
+        assert np.array_equal(pa.counts, pb.counts)
+        assert np.array_equal(np.asarray(pa.batch.oid),
+                              np.asarray(pb.batch.oid))
+        assert np.array_equal(np.asarray(pa.batch.valid),
+                              np.asarray(pb.batch.valid))
+    assert np.array_equal(np.asarray(a.sync.synced_version),
+                          np.asarray(b.sync.synced_version))
+
+
+def test_device_client_donated_ingest_identity():
+    from repro.core.runtime import CloudService, DeviceClient
+    from repro.core import MappingServer
+    from repro.data.scenes import make_scene, scene_stream
+    from repro.perception.embedder import OracleEmbedder
+    kn = Knobs(server_capacity=CAP, client_capacity=64,
+               max_object_points_server=64, max_object_points_client=16,
+               max_detections_per_frame=16, min_obs_before_sync=1)
+    scene = make_scene(n_objects=10, seed=3)
+    classes = {o.oid: o.class_id for o in scene.objects}
+    srv = MappingServer(knobs=kn, embedder=OracleEmbedder(embed_dim=E),
+                        mode="semanticxr")
+    key = jax.random.key(0)
+    for i, fr in enumerate(scene_stream(scene, n_frames=12,
+                                        keyframe_interval=4, h=60, w=80)):
+        srv.process_frame(fr, classes, jax.random.fold_in(key, i))
+
+    out = []
+    for donate in (False, True):
+        cloud = CloudService(knobs=kn, store_ref=srv)
+        dev = DeviceClient(knobs=kn, embed_dim=E, donate=donate)
+        pkt = cloud.update_tick(network_up=True)
+        dev.ingest(pkt, user_pos=jnp.zeros(3))
+        out.append(jax.tree.map(np.asarray, dev.local))
+    assert _stores_equal(out[0], out[1])
+
+
+def test_mapping_server_donated_ingest_identity():
+    from repro.core import MappingServer
+    from repro.data.scenes import make_scene, scene_stream
+    from repro.perception.embedder import OracleEmbedder
+    kn = Knobs(server_capacity=CAP, client_capacity=64,
+               max_object_points_server=64, max_object_points_client=16,
+               max_detections_per_frame=16, min_obs_before_sync=1)
+    scene = make_scene(n_objects=8, seed=5)
+    classes = {o.oid: o.class_id for o in scene.objects}
+    stores = []
+    for donate in (False, True):
+        srv = MappingServer(knobs=kn, embedder=OracleEmbedder(embed_dim=E),
+                            mode="semanticxr", donate=donate)
+        key = jax.random.key(0)
+        for i, fr in enumerate(scene_stream(scene, n_frames=10,
+                                            keyframe_interval=4,
+                                            h=60, w=80)):
+            srv.process_frame(fr, classes, jax.random.fold_in(key, i))
+        stores.append(jax.tree.map(np.asarray, srv.store))
+    assert _stores_equal(stores[0], stores[1])
+
+
+# ---------------------------------------------------------------------------
+# whole-loop equality: overlapped schedule is unobservable end to end
+# ---------------------------------------------------------------------------
+def _loop(overlap, n_ticks=10, C=6):
+    store = _store()
+    srv = FleetServer(knobs=KN, embed_dim=E, n_clients=C,
+                      grid=ZoneGrid.for_room(16.0, 2, 2), budget=16,
+                      donate=overlap)
+    lg = LoadGenerator(LoadSpec(n_clients=C, n_ticks=n_ticks, base_hz=3.0,
+                                burst_hz=30.0, burst_prob=0.1),
+                       embed_dim=E)
+    ing = _stream(n_ticks=n_ticks)
+    snap = SnapshotStore.of(store) if overlap \
+        else SnapshotStore(front=store)
+    for c in range(C):
+        srv.join(c, lg.pose_at(c, 0), 6.0)
+    loop = ServingLoop(server=srv, store=snap, ingest=ing, loadgen=lg,
+                       overlap=overlap, batch_size=8,
+                       max_batches_per_tick=2)
+    stats = loop.run(n_ticks)
+    return loop, stats
+
+
+def test_serving_loop_sync_vs_overlapped_byte_identical():
+    a, sa = _loop(False)
+    b, sb = _loop(True)
+    assert sa["n_queries_served"] == sb["n_queries_served"] > 0
+    assert sa["sent_bytes_total"] == sb["sent_bytes_total"] > 0
+    assert set(a.results) == set(b.results)
+    for rid in a.results:
+        assert np.array_equal(a.results[rid].oids, b.results[rid].oids)
+        assert np.array_equal(a.results[rid].scores, b.results[rid].scores)
+    assert _stores_equal(jax.tree.map(np.asarray, a.store.front),
+                         jax.tree.map(np.asarray, b.store.front))
+
+
+def test_fleet_tick_overlap_byte_identity():
+    """server.tick(overlap=True) must emit byte-identical packets to the
+    sequential per-zone path, across refreshes and pose churn."""
+    def run(overlap):
+        rng = np.random.default_rng(0)
+        store = _store()
+        srv = FleetServer(knobs=KN, embed_dim=E, n_clients=5,
+                          grid=ZoneGrid.for_room(16.0, 2, 2), budget=16,
+                          donate=overlap)
+        for c in range(5):
+            srv.join(c, rng.uniform(-6, 6, 3).astype(np.float32), 7.0)
+        stream = _stream(n_ticks=4, seed=9)
+        out = []
+        deliverable = np.ones((5,), bool)
+        for t in range(4):
+            store = apply_delta(store, stream.delta_at(t))
+            srv.refresh(store)
+            for z, pkt in srv.tick(deliverable, tick=t, overlap=overlap):
+                out.append((z, np.asarray(pkt.nbytes).copy(),
+                            np.asarray(pkt.batch.oid).copy(),
+                            np.asarray(pkt.seqs).copy()))
+        return out
+
+    seq, ovl = run(False), run(True)
+    assert len(seq) == len(ovl) > 0
+    for (za, na, oa, sa), (zb, nb, ob, sb) in zip(seq, ovl):
+        assert za == zb
+        assert np.array_equal(na, nb)
+        assert np.array_equal(oa, ob)
+        assert np.array_equal(sa, sb)
+
+
+def test_engine_async_loop_replay_bit_identical():
+    from repro.sim import churn_scenario, run_scenario
+    sc = churn_scenario(seed=11, n_objects=12, n_ticks=12, n_clients=2,
+                        remove_frac=0.25, drain_ticks=4)
+    a = run_scenario(sc)
+    b = run_scenario(sc, async_loop=True)
+    assert a.equals(b), f"drift in fields: {a.diff(b)}"
+
+
+# ---------------------------------------------------------------------------
+# load generator: seeded, open-loop, deterministic
+# ---------------------------------------------------------------------------
+def test_loadgen_deterministic_and_open_loop():
+    spec = LoadSpec(n_clients=16, n_ticks=40, base_hz=1.0, burst_hz=20.0,
+                    burst_prob=0.05, seed=4)
+    a, b = LoadGenerator(spec, embed_dim=E), LoadGenerator(spec,
+                                                           embed_dim=E)
+    assert a.n_arrivals == b.n_arrivals > 0
+    for ta, tb in zip(a.arrivals, b.arrivals):
+        assert len(ta) == len(tb)
+        for (ca, qa), (cb, qb) in zip(ta, tb):
+            assert ca == cb
+            assert np.array_equal(np.asarray(qa.embed),
+                                  np.asarray(qb.embed))
+            assert np.array_equal(np.asarray(qa.near[0]),
+                                  np.asarray(qb.near[0]))
+    # bursty: some tick carries >1 arrival; open loop: schedule exists
+    # regardless of any server serving it
+    assert max(len(t) for t in a.arrivals) > 1
+    # poses follow the cadence and the parametric track
+    p0 = a.poses(0)
+    assert p0.shape == (16, 3)
+    np.testing.assert_allclose(p0[3], a.pose_at(3, 0), atol=1e-6)
+
+
+def test_batched_pose_update_matches_per_client_path():
+    """overlaps_batch == per-client overlaps, and FleetServer.set_poses
+    leaves identical session state to C set_client_pose calls."""
+    grid = ZoneGrid.for_room(16.0, 3, 2)
+    rng = np.random.default_rng(2)
+    poses = rng.uniform(-10, 10, size=(32, 3)).astype(np.float32)
+    batch = grid.overlaps_batch(poses, 5.0)
+    for c in range(32):
+        assert np.array_equal(batch[c], grid.overlaps(poses[c], 5.0))
+
+    def mk():
+        srv = FleetServer(knobs=KN, embed_dim=E, n_clients=6,
+                          grid=ZoneGrid.for_room(16.0, 2, 2), budget=16)
+        for c in range(6):
+            srv.join(c, poses[c], 6.0)
+        return srv
+    a, b = mk(), mk()
+    for t in range(3):
+        step = poses[t * 6:(t + 1) * 6] * (0.5 + 0.2 * t)
+        for c in range(6):
+            a.set_client_pose(c, step[c], 6.0)
+        b.set_poses(step, 6.0)
+        assert np.array_equal(a.subscribed, b.subscribed)
+        for sa, sb in zip(a.sessions, b.sessions):
+            assert sa.dirty == sb.dirty
+            assert np.array_equal(sa.subscribed, sb.subscribed)
+            assert np.array_equal(sa.user_pos, sb.user_pos)
+            assert np.array_equal(np.asarray(sa.sync.synced_version),
+                                  np.asarray(sb.sync.synced_version))
+            assert np.array_equal(sa.next_seq, sb.next_seq)
+
+
+def test_loadgen_latency_accounting():
+    lg = LoadGenerator(LoadSpec(n_clients=2, n_ticks=4, seed=0),
+                       embed_dim=E)
+    lg.note_submit(0, 1.0)
+    lg.note_served(0, 1.010)
+    lg.note_resolved(0, 1.025)
+    assert lg.wait_ms == [pytest.approx(10.0)]
+    assert lg.e2e_ms == [pytest.approx(25.0)]
+    rep = lg.record("test")
+    assert rep["e2e_ms"]["p99"] == pytest.approx(25.0)
