@@ -77,7 +77,16 @@ SPECS = {
     "fleet_scale": [
         Check("sweep.*.tick_ms", "latency", LAT),
         Check("sweep.*.tick_ms_p99", "latency", LAT),
+        Check("sweep.*.tick_ms_sharded", "latency", LAT),
+        Check("sweep.*.tick_ms_sharded_p99", "latency", LAT),
         Check("sweep.*.per_client_bytes", "exact"),
+        # the mesh-sharded session tier is a placement change ONLY: its
+        # wire packets must stay bit-identical to the single-device path,
+        # and the sharded per-tick cost must grow sub-linearly in C
+        Check("sweep.*.byte_identical_to_unsharded", "invariant_true"),
+        Check("sharding.byte_identical_to_unsharded", "invariant_true"),
+        Check("sharding.sublinear", "invariant_true"),
+        Check("sublinear", "invariant_true"),
     ],
     "serving_loop": [
         # throughput band: overlapped ticks/s must not drop >50% (noisy

@@ -382,11 +382,22 @@ class ClientSession:
     lost: int = 0                      # downlink packets the channel ate
     dup_drops: int = 0                 # duplicate deliveries discarded
     corrupt_drops: int = 0             # checksum-failed deliveries discarded
+    stale_drops: int = 0               # out-of-subscription deliveries
+    #                                    dropped at the device (zone-crossing
+    #                                    mid-flight staleness fix)
     resyncs: int = 0                   # resync requests issued
     epoch: int = -1                    # adopted server sync epoch
     pending: list = field(default_factory=list)   # [(deliver_at, packet)]
     acks: list = field(default_factory=list)      # [(zone, epoch, seq)] out
     ctrl: list = field(default_factory=list)      # [("resync", zone)] out
+    zone_subs: object = None           # [Z] bool — the device's CURRENT
+    #                                    zone subscriptions.  Set on every
+    #                                    pose/zone change (engine) and at
+    #                                    each prune; packets from zones
+    #                                    outside it are dropped AT DELIVERY
+    #                                    (never ingested) instead of being
+    #                                    applied and pruned a tick later.
+    #                                    None = gate off (legacy callers).
     _expect: dict = field(default_factory=dict)   # zone -> next seq to apply
     _reorder: dict = field(default_factory=dict)  # zone -> {seq: packet}
     _gap_since: dict = field(default_factory=dict)   # zone -> gap open time
@@ -438,6 +449,15 @@ class ClientSession:
         if self.dev.cluster_index is not None:
             self.dev.cluster_index.refresh(self.dev.local)
 
+    def _zone_ok(self, zone: int) -> bool:
+        """Is the device still subscribed to ``zone``?  Gate for the
+        stale-zone drop; ``zone_subs is None`` disables the gate (legacy
+        single-zone callers that never track subscriptions)."""
+        if self.zone_subs is None:
+            return True
+        subs = np.asarray(self.zone_subs, bool)
+        return bool(subs[zone]) if zone < len(subs) else False
+
     def _ack(self, zone: int, seq: int) -> None:
         self.acks.append((zone, self.epoch, seq))
         if self.faults is not None:
@@ -481,11 +501,22 @@ class ClientSession:
                 self._count_fault("dup_drop")
             self._gap_since.setdefault(z, t)
             return
-        # in order: apply, then drain whatever the gap was holding back
+        # in order: apply, then drain whatever the gap was holding back.
+        # Zone-crossing mid-flight fix: a packet from a zone the device no
+        # longer subscribes to is DROPPED here, never ingested — but its
+        # seq still advances and the cumulative ack still goes out, so the
+        # stream position survives a zone round-trip (the server kept the
+        # seq stream via reset_client(keep_seq=True); swallowing the seq
+        # would make re-entry packets look like a gap -> spurious resyncs).
+        ok = self._zone_ok(z)
         buf = self._reorder.get(z, {})
         seq = packet.seq
         while True:
-            self._ingest(packet)
+            if ok:
+                self._ingest(packet)
+            else:
+                self.stale_drops += 1
+                self._count_fault("stale_zone_drop")
             seq += 1
             if seq in buf:
                 packet = buf.pop(seq)
@@ -568,6 +599,9 @@ class ClientSession:
         staleness fix — without it a returning client keeps answering
         local queries from dead state it will never receive tombstones
         for).  Returns how many entries were pruned."""
+        # refresh the delivery gate too: even callers that don't wire
+        # zone_subs on pose changes converge here each prune
+        self.zone_subs = np.asarray(subscribed, bool).copy()
         m = self.dev.local
         act = np.asarray(m.active)
         if not act.any():
@@ -593,6 +627,7 @@ class ClientSession:
         self.dev.local = init_local_map(self.dev.knobs, self.dev.embed_dim)
         self._resync_index()
         self.epoch = -1
+        self.zone_subs = None
         self._expect = {}
         self._reorder = {}
         self._gap_since = {}

@@ -102,7 +102,25 @@ def render_frame(scene: Scene, idx: int, *, h: int = 120, w: int = 160,
     fx = fy = 0.9 * w
     cx, cy = w / 2, h / 2
     intr = np.array([fx, fy, cx, cy], np.float32)
+    return _splat(scene, idx, pose, intr, h, w, min_pixels)
 
+
+def rerender_frame(scene: Scene, frame: Frame,
+                   *, min_pixels: int = 12) -> Frame:
+    """Re-render an existing frame's viewpoint against the CURRENT scene:
+    same pose / intrinsics / resolution, fresh depth + instance splat.
+    This is how a dynamic scene event (spawn / move / remove) becomes
+    visible to a mapping frontend that consumes pre-rendered frames — the
+    engine re-renders the tick's frame instead of replaying stale pixels.
+    Identical to ``render_frame`` when the scene hasn't changed."""
+    h, w = frame.depth.shape
+    return _splat(scene, frame.idx, frame.pose, frame.intrinsics, h, w,
+                  min_pixels)
+
+
+def _splat(scene: Scene, idx: int, pose: np.ndarray, intr: np.ndarray,
+           h: int, w: int, min_pixels: int) -> Frame:
+    fx, fy, cx, cy = (float(x) for x in intr)
     depth = np.zeros((h, w), np.float32)
     inst = np.zeros((h, w), np.int32)
     zbuf = np.full((h, w), np.inf, np.float32)
@@ -127,7 +145,8 @@ def render_frame(scene: Scene, idx: int, *, h: int = 120, w: int = 160,
     ids, counts = np.unique(inst[inst > 0], return_counts=True)
     visible = ids[counts >= min_pixels]
     return Frame(idx=idx, depth=depth, inst=inst, pose=pose,
-                 intrinsics=intr, visible_ids=visible.astype(np.int32))
+                 intrinsics=np.asarray(intr, np.float32),
+                 visible_ids=visible.astype(np.int32))
 
 
 def scene_stream(scene: Scene, n_frames: int = 200, keyframe_interval: int = 5,

@@ -300,3 +300,36 @@ def zone_shard_devices(mesh: Mesh, n_zones: int) -> list:
     On the 1-device container every zone maps to the same device (no-op)."""
     devs = list(mesh.devices.flat)
     return [devs[z % len(devs)] for z in range(n_zones)]
+
+
+def client_shard_affinity(subscribed: np.ndarray, n_shards: int,
+                          zone_shards: np.ndarray | None = None) -> np.ndarray:
+    """Assign each client to a session shard by subscribed-zone affinity.
+
+    ``subscribed`` is the fleet's [C, Z] zone-subscription matrix and
+    ``zone_shards`` [Z] maps each spatial zone to the session shard whose
+    device holds that zone's store arrays (``zone_shard_devices``
+    placement: defaults to z % n_shards).  A client is homed on the shard
+    that owns the MOST of its subscribed zones — majority vote, lowest
+    shard id on ties — so the sharded session tier's sync gathers read
+    zone stores resident on the same device.  Clients with no
+    subscriptions yet fall back to round-robin (c % n_shards), which
+    keeps the partition load-balanced before the first pose arrives.
+
+    Returns [C] int32 shard assignment.  The assignment is computed at
+    tier construction; live re-homing of a moving client is a control-
+    plane migration (ROADMAP) and is not done per pose update.
+    """
+    subscribed = np.asarray(subscribed, bool)
+    C, Z = subscribed.shape
+    if zone_shards is None:
+        zone_shards = np.arange(Z) % n_shards
+    zone_shards = np.asarray(zone_shards)
+    # [C, S] votes: how many of client c's zones live on shard s
+    votes = np.zeros((C, n_shards), np.int64)
+    for s in range(n_shards):
+        votes[:, s] = subscribed[:, zone_shards == s].sum(axis=1)
+    assign = votes.argmax(axis=1).astype(np.int32)   # argmax = lowest tie
+    none = ~subscribed.any(axis=1)
+    assign[none] = (np.arange(C)[none] % n_shards).astype(np.int32)
+    return assign

@@ -23,6 +23,22 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def donate_default() -> bool:
+    """Buffer-donation policy, keyed off the backend like ``_interpret``.
+
+    Donating a dead input buffer (``donate_argnums``) lets XLA write the
+    output in place — a win on TPU/GPU where dispatch is asynchronous.
+    Under CPU dispatch semantics, however, issuing a dispatch that donates
+    a buffer BLOCKS the caller until the donated buffer's producer has
+    finished, which serializes exactly the overlap the donation was meant
+    to cheapen (PR 9 measurement: the overlapped serving loop lost its
+    entire win with donation on).  Callers that take ``donate=None``
+    ("auto") resolve it here: on for TPU/GPU, off for CPU.  Byte-identity
+    between the two settings is asserted in tests/test_serving_loop.py.
+    """
+    return jax.default_backend() not in ("cpu",)
+
+
 @partial(jax.jit, static_argnums=(3,))
 def query_topk(q, embeds, active, k: int):
     return _qt.query_topk_pallas(q, embeds, active, k,

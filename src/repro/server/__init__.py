@@ -17,6 +17,14 @@ Three layers:
              to the zones their pose overlaps; downstream work scales with
              per-client zone *changes*, not fleet size.
 
+``mesh``     ClientRoster / MeshSessionTier / MeshFleetPacket — the client
+             axis of a zone's session tier partitioned across S session
+             shards (one per mesh device) by subscribed-zone affinity;
+             control-plane messages route to the owning shard, the k-way
+             merge happens only at the wire boundary, packets stay
+             byte-identical to the single-device path
+             (`FleetServer(n_session_shards=S)`).
+
 ``fleet``    FleetServer (zones x sessions composition) and FleetSimulator —
              tens-to-hundreds of simulated clients with heterogeneous
              `core.runtime.NetworkModel`s (mixed RTTs, staggered outages,
@@ -39,4 +47,6 @@ from repro.core.query import (Query, QueryResult, CompiledQuery,
 from repro.server.session import (FleetBatch, FleetPacket, FleetSync,
                                   SessionManager)
 from repro.server.zones import ZoneGrid, ZoneShardedStore
+from repro.server.mesh import (ClientRoster, MeshFleetPacket,
+                               MeshSessionTier)
 from repro.server.fleet import FleetServer, FleetSimulator, SimClient

@@ -52,9 +52,20 @@ class FleetServer:
     grid: ZoneGrid
     budget: int = 64                   # per-client objects per tick per zone
     proto: bool = False                # fault-injection transport framing
-    donate: bool = False               # sessions donate their [C, N] sync
+    donate: bool | None = False        # sessions donate their [C, N] sync
     #                                    state to the collect dispatch
-    #                                    (in-place advance; byte-identical)
+    #                                    (in-place advance; byte-identical).
+    #                                    None = backend-aware auto
+    #                                    (kernels.ops.donate_default)
+    n_session_shards: int = 1          # >1: each zone's session tier is a
+    #                                    MeshSessionTier — the client axis
+    #                                    partitioned across S session shards
+    #                                    (one per mesh device), control
+    #                                    plane routed to the owning shard,
+    #                                    packets byte-identical (server/
+    #                                    mesh.py)
+    roster: object = None              # shared ClientRoster when sharded
+    #                                    (None = round-robin over clients)
     index: bool = True                 # maintain per-zone cluster indexes
     #                                    (repro.index; queries go two-stage
     #                                     only past min_flat_size, so small
@@ -79,13 +90,26 @@ class FleetServer:
         if self.index and not self.zoned.indexes:
             self.zoned.enable_index()
         if not self.sessions:
-            self.sessions = [
-                SessionManager(knobs=self.knobs, n_clients=self.n_clients,
-                               capacity=self.zoned.zone_capacity,
-                               budget=self.budget, proto=self.proto,
-                               donate=self.donate,
-                               subscribed=np.zeros((self.n_clients,), bool))
-                for _ in range(self.grid.n_zones)]
+            if self.n_session_shards > 1:
+                from repro.server.mesh import ClientRoster, MeshSessionTier
+                if self.roster is None:
+                    self.roster = ClientRoster.round_robin(
+                        self.n_clients, self.n_session_shards)
+                self.sessions = [
+                    MeshSessionTier(knobs=self.knobs, roster=self.roster,
+                                    capacity=self.zoned.zone_capacity,
+                                    budget=self.budget, proto=self.proto,
+                                    donate=self.donate)
+                    for _ in range(self.grid.n_zones)]
+            else:
+                self.sessions = [
+                    SessionManager(
+                        knobs=self.knobs, n_clients=self.n_clients,
+                        capacity=self.zoned.zone_capacity,
+                        budget=self.budget, proto=self.proto,
+                        donate=self.donate,
+                        subscribed=np.zeros((self.n_clients,), bool))
+                    for _ in range(self.grid.n_zones)]
         if self.subscribed is None:
             self.subscribed = np.zeros((self.n_clients, self.grid.n_zones),
                                        bool)
@@ -140,8 +164,10 @@ class FleetServer:
                 sess.reset_client(int(c), keep_seq=True)   # zone exit
             if changed[:, z].any():
                 sess.dirty = True                          # membership
-            sess.subscribed[:] = subs[:, z]
-            sess.user_pos[:] = poses
+            # routed whole-fleet write: in-place on a plain session, split
+            # by the roster on a sharded tier (direct [:] writes would
+            # silently no-op against the tier's assembled-copy property)
+            sess.set_all(subscribed=subs[:, z], user_pos=poses)
 
     def _bump_epoch(self, c: int, *, fresh: bool):
         """Advance the client's sync epoch.  fresh=True restarts the whole
@@ -181,6 +207,19 @@ class FleetServer:
         epoch and a full catch-up."""
         for s in self.sessions:
             s.reset_client(c)
+
+    def crash_shard(self, shard: int, *, tick: int = 0):
+        """A session shard's host died: its slice of the sync/ack/in-flight
+        state is gone.  Recovery is per-CLIENT fresh epochs for exactly the
+        clients homed on that shard (their next deliverable tick ships a
+        full catch-up); clients on surviving shards keep their epochs,
+        streams, and in-flight windows untouched — asserted in
+        tests/test_fault_tolerance.py."""
+        assert self.roster is not None, "crash_shard needs a sharded tier"
+        for c in np.nonzero(self.roster.assign == shard)[0]:
+            self._bump_epoch(int(c), fresh=True)
+            self.last_ack_tick[c] = tick
+            self.needs_fresh[c] = False
 
     # -- hardened-protocol control plane -----------------------------------
     def ack(self, c: int, zone: int, epoch: int, seq: int, *, tick: int = 0):

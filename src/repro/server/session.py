@@ -221,6 +221,11 @@ class FleetPacket:
     def total_nbytes(self) -> int:
         return int(self.nbytes.sum())
 
+    def block_until_ready(self) -> None:
+        """Fence the packet's device tensors (serving-loop sync path)."""
+        if self.batch is not None:
+            jax.block_until_ready(self.batch.valid)
+
     def tomb_counts(self) -> np.ndarray:
         """[C] tombstone rows actually shipped per client this tick."""
         if self.batch is None or self.batch.deleted is None:
@@ -278,9 +283,14 @@ class SessionManager:
     #                                    shipped nothing (fleet quiesced)
     proto: bool = False                # fault-injection transport on: count
     #                                    framing bytes + checksum packets
-    donate: bool = False               # donate the [C, N] sync state to the
+    donate: bool | None = False        # donate the [C, N] sync state to the
     #                                    collect dispatch (in-place advance;
-    #                                    see _collect_fleet_donated)
+    #                                    see _collect_fleet_donated).  None =
+    #                                    backend-aware auto policy
+    #                                    (kernels.ops.donate_default): on for
+    #                                    TPU/GPU, OFF on CPU, where a donated
+    #                                    dispatch blocks on the donated
+    #                                    buffer's producer
     acked: np.ndarray = None           # [C, N] int32 — versions each client
     #                                    has CONFIRMED applying (cumulative
     #                                    acks); trails sync, drives slot
@@ -298,6 +308,9 @@ class SessionManager:
     def __post_init__(self):
         C, N = self.n_clients, self.capacity
         self.budget = min(self.budget, N)
+        if self.donate is None:
+            from repro.kernels.ops import donate_default
+            self.donate = donate_default()
         if self.sync is None:
             self.sync = FleetSync(jnp.zeros((C, N), jnp.int32),
                                   jnp.zeros((C, N), bool))
@@ -340,6 +353,16 @@ class SessionManager:
             if bool(subscribed) != bool(self.subscribed[c]):
                 self.dirty = True      # membership changed: re-collect
             self.subscribed[c] = bool(subscribed)
+
+    def set_all(self, *, subscribed=None, user_pos=None):
+        """Whole-fleet writes of the stacked per-client knob arrays (the
+        pose-stream hot path).  Dirty marking stays with the caller —
+        FleetServer.set_poses computes membership changes once for every
+        zone from the [C, Z] broadcast test."""
+        if subscribed is not None:
+            self.subscribed[:] = np.asarray(subscribed, bool)
+        if user_pos is not None:
+            self.user_pos[:] = np.asarray(user_pos, np.float32)
 
     def reset_client(self, c: int, *, keep_seq: bool = False):
         """Fresh join (or zone re-entry): zero the sync + acked rows so the

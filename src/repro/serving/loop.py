@@ -254,7 +254,9 @@ class ServingLoop:
                 packets = self.server.tick(self._deliverable, tick=t,
                                            overlap=False)
                 for _, pkt in packets:
-                    jax.block_until_ready(pkt.batch.valid)
+                    # fence via the packet (a mesh-sharded tier fences
+                    # every shard's tensors, not one [C, U] batch)
+                    pkt.block_until_ready()
                 self._account_packets(packets, t)
 
     def _account_packets(self, packets: list, t: int) -> None:

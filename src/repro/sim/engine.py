@@ -210,8 +210,15 @@ class ScenarioEngine:
     """Run a Scenario through the full device-cloud loop.
 
     ``mapper``/``frames``/``classes`` switch the map source from the
-    event-driven WorldState to a real mapping frontend (only 'remove'
-    events apply then — they tombstone the mapper's store directly).
+    event-driven WorldState to a real mapping frontend.  With ``scene``
+    set, object events mutate the Scene and the tick's frame is
+    RE-RENDERED from the changed geometry before the mapper sees it —
+    spawn and move become visible through the perception path exactly
+    like remove (pre-PR-10 only 'remove' acted, by tombstoning the store
+    directly; a moved or spawned object stayed invisible until an
+    unrelated refresh).  'remove' still tombstones the mapper's store
+    directly too: re-rendering stops new observations, the tombstone
+    propagates the deletion.
     ``query_hook(cid, t, spec)`` externalizes SQ execution (the
     FleetSimulator routes through serving.BatchScheduler); ``tick_hook(t)``
     runs after every tick (scheduler pumping).
@@ -219,6 +226,8 @@ class ScenarioEngine:
     scenario: Scenario
     mapper: object = None
     frames: list = None
+    scene: object = None               # data.scenes.Scene behind ``frames``
+    #                                    (enables dynamic-scene re-render)
     classes: dict = None
     embedder: object = None            # query-side embeddings (mapper path)
     query_hook: object = None
@@ -251,7 +260,8 @@ class ScenarioEngine:
                                       n_clients=len(sc.clients), grid=grid,
                                       budget=sc.budget,
                                       proto=self._hardened,
-                                      donate=self.async_loop)
+                                      donate=None if self.async_loop
+                                      else False)
         if self.mapper is None and self.world is None:
             self.world = WorldState(knobs=sc.knobs, embed_dim=sc.embed_dim,
                                     seed=sc.seed)
@@ -275,6 +285,12 @@ class ScenarioEngine:
         for ev in sc.crash_events:
             self._crashes[ev.tick].append(ev)
         self._crashed_until = {}           # cid -> first tick back up
+        self._scene_dirty = False          # a scene event happened: frames
+        #                                    rendered before it are stale —
+        #                                    re-render each tick's frame at
+        #                                    use time (sticky: the change is
+        #                                    permanent, every later
+        #                                    pre-rendered frame predates it)
         # measured LQ latency curve (None -> LQ_MODEL_MS fallback); loaded
         # once so every tick interpolates the same committed artifact
         self._lq_curve = load_lq_curve()
@@ -302,6 +318,9 @@ class ScenarioEngine:
         spawned = moved = removed = 0
         for ev in self._events.get(i, ()):
             if self.mapper is not None:
+                s, m = self._apply_scene_event(ev)
+                spawned += s
+                moved += m
                 if ev.kind == "remove":
                     before = int(np.asarray(
                         deleted_mask(self.mapper.store)).sum())
@@ -317,6 +336,46 @@ class ScenarioEngine:
             moved += self.world.moved - before[1]
             removed += self.world.removed - before[2]
         return spawned, moved, removed
+
+    def _apply_scene_event(self, ev) -> tuple:
+        """Mutate the mapper-backed Scene for one object event so the
+        tick's RE-RENDERED frame shows it (see ``scene``).  Returns
+        (spawned, moved) deltas; 'remove' geometry is dropped here but
+        counted by the store-tombstone path in ``_apply_events``.
+        Deterministic: spawn geometry is seeded by (scene seed, oid),
+        mirroring WorldState.spawn."""
+        if self.scene is None:
+            return 0, 0
+        from repro.data.scenes import SceneObject, _object_cloud
+        objs = self.scene.objects
+        if ev.kind == "spawn":
+            if any(o.oid == ev.oid for o in objs):
+                return 0, 0
+            rng = np.random.default_rng((self.scene.rng_seed, ev.oid))
+            center = np.asarray(ev.pos, np.float32)
+            pts = (_object_cloud(rng, ev.class_id % 3, 0.5, ev.n_points)
+                   + center).astype(np.float32)
+            objs.append(SceneObject(oid=ev.oid, class_id=ev.class_id,
+                                    center=center, points=pts))
+            if self.classes is not None:
+                self.classes[ev.oid] = ev.class_id
+            self._scene_dirty = True
+            return 1, 0
+        if ev.kind == "move":
+            for o in objs:
+                if o.oid == ev.oid:
+                    d = np.asarray(ev.delta, np.float32)
+                    o.points = o.points + d
+                    o.center = o.center + d
+                    self._scene_dirty = True
+                    return 0, 1
+            return 0, 0
+        if ev.kind == "remove":
+            keep = [o for o in objs if o.oid != ev.oid]
+            if len(keep) != len(objs):
+                self.scene.objects = keep
+                self._scene_dirty = True
+        return 0, 0
 
     def _apply_knob_events(self, i: int) -> None:
         for ev in self._knob_events.get(i, ()):
@@ -370,8 +429,16 @@ class ScenarioEngine:
                 spawned, moved, removed = self._apply_events(i)
             if self.mapper is not None and self.frames is not None \
                     and i < len(self.frames):
+                frame = self.frames[i]
+                if self.scene is not None and self._scene_dirty:
+                    # dynamic scene: this frame was rendered before the
+                    # event — re-splat its viewpoint against the mutated
+                    # geometry so the mapper OBSERVES the change
+                    from repro.data.scenes import rerender_frame
+                    frame = rerender_frame(self.scene, frame)
+                    self.frames[i] = frame
                 with obs_span("engine.map_frame", cat="ingest"):
-                    self.mapper.process_frame(self.frames[i], self.classes,
+                    self.mapper.process_frame(frame, self.classes,
                                               jax.random.fold_in(key, i))
             gc_n = 0
             if self.world is not None and sc.tombstone_ttl is not None:
@@ -405,6 +472,11 @@ class ScenarioEngine:
                     pos = spec.track.pose_at(t)
                     sess.user_pos = jnp.asarray(pos)
                     self.server.set_client_pose(cid, pos, self._radius[cid])
+                    # zone-crossing mid-flight fix: the device's delivery
+                    # gate tracks the NEW subscriptions immediately, so an
+                    # in-air packet from a just-left zone is dropped at
+                    # delivery instead of applied-then-pruned a tick later
+                    sess.zone_subs = self.server.subscribed[cid].copy()
                     deliverable[cid] = sess.net.is_up(t)
                     active[cid] = True
 

@@ -322,3 +322,179 @@ def test_stale_version_update_is_dropped():
     for a, b in zip(before, m):
         assert a.tobytes() == np.asarray(b).tobytes()
     assert int(m.version[0]) == 3
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded session tier: multi-host control-plane routing (ISSUE 10)
+# ---------------------------------------------------------------------------
+def _shard_scenario(*, seed=21, faults=None, n_clients=4, drain=DRAIN,
+                    remove_ticks=(4,)):
+    """Multi-zone variant of ``_base_scenario``: 2x1 zone grid with the
+    clients spread across both zones so ack/resync routing crosses zone
+    sessions AND roster shards."""
+    events = [ObjectEvent(tick=0, kind="spawn", oid=oid, class_id=oid % 4,
+                          pos=(1.1 * oid - 3.0, 1.0, 0.3 * oid - 0.7),
+                          n_points=4 + oid)
+              for oid in range(1, 6)]
+    for k, tk in enumerate(remove_ticks):
+        events.append(ObjectEvent(tick=tk, kind="remove", oid=k + 1))
+    events.sort(key=lambda e: (e.tick, e.kind, e.oid))
+    clients = tuple(ClientSpec(
+        cid=c, net=NetTrace(),
+        track=PoseTrack(anchor=(2.0 * c - 3.0, 1.5, 0.0)),
+        subscribe_radius=10.0) for c in range(n_clients))
+    return Scenario(seed=seed, n_ticks=N_TICKS, embed_dim=E, knobs=KN,
+                    grid=GridSpec(room=8.0, nx=2, nz=1), budget=16,
+                    clients=clients, events=tuple(events),
+                    query=QueryPlan(prob=0.0), drain_ticks=drain,
+                    tombstone_ttl=2, faults=faults)
+
+
+def _toy_store(n_obj=6):
+    """A populated ObjectStore with centroids spread across both zones."""
+    store = init_store(KN.server_capacity, E, KN.max_object_points_server)
+    for s in range(n_obj):
+        store = store._replace(
+            ids=store.ids.at[s].set(s + 1),
+            active=store.active.at[s].set(True),
+            embed=store.embed.at[s].set(jnp.ones(E) / np.sqrt(float(E))),
+            centroid=store.centroid.at[s].set(
+                jnp.array([1.2 * s - 3.0, 1.0, 0.0])),
+            n_points=store.n_points.at[s].set(4 + s),
+            obs_count=store.obs_count.at[s].set(3),
+            version=store.version.at[s].set(1 + s))
+    return store
+
+
+def _shard_server(sc, n_shards):
+    from repro.server.fleet import FleetServer
+    from repro.server.zones import ZoneGrid
+    grid = ZoneGrid.for_room(sc.grid.room, sc.grid.nx, sc.grid.nz)
+    return FleetServer(knobs=sc.knobs, embed_dim=sc.embed_dim,
+                       n_clients=len(sc.clients), grid=grid,
+                       budget=sc.budget,
+                       proto=sc.faults is not None, donate=False,
+                       n_session_shards=n_shards)
+
+
+def test_sharded_tier_chaos_byte_identical_to_unsharded():
+    """Under a loss+reorder+dup mix (natural resyncs, retransmits, and
+    epoch-stale acks in flight) the sharded session tier replays
+    BIT-IDENTICALLY to the unsharded server — control-plane messages land
+    on the owning shard with the same effect as the single-device path —
+    and both converge content-identical to the fault-free run."""
+    fm = FaultModel(seed=5, loss_prob=0.2, dup_prob=0.2, reorder_prob=0.3,
+                    reorder_jitter_s=2.0)
+    sc = _shard_scenario(faults=fm)
+    eng_1 = ScenarioEngine(sc, server=_shard_server(sc, 1))
+    log_1 = eng_1.run()
+    eng_s = ScenarioEngine(_shard_scenario(faults=fm),
+                           server=_shard_server(sc, 3))
+    log_s = eng_s.run()
+    assert log_1.equals(log_s), log_1.diff(log_s)
+    assert (eng_s.server.epoch == eng_1.server.epoch).all()
+
+    clean = ScenarioEngine(_shard_scenario(faults=None))
+    clean.run()
+    assert eng_s.world.live_ids() == clean.world.live_ids()
+    for cid in eng_s.sessions:
+        got = _canonical_map(eng_s.sessions[cid].dev.local)
+        want = _canonical_map(clean.sessions[cid].dev.local)
+        assert got == want, f"client {cid} diverged under sharding"
+    assert int(np.asarray(deleted_mask(eng_s.world.store)).sum()) == 0
+
+
+def test_epoch_stale_ack_at_owning_shard_is_dropped():
+    """An ack that arrives with a superseded epoch (late over the network,
+    routed to the client's owning shard) must be a no-op: it must not
+    advance the shard's acked state nor clear the pending-fresh flag."""
+    sc = _shard_scenario(faults=FaultModel(seed=1))
+    srv = _shard_server(sc, 3)
+    srv.refresh(_toy_store())
+    for c in range(4):
+        srv.join(c, (2.0 * c - 3.0, 1.5, 0.0), 10.0)
+    deliver = np.ones(4, bool)
+    pkts = srv.tick(deliver, tick=0)
+    (z, pkt), = [(z, p) for z, p in pkts if p.seqs[1] >= 0][:1]
+    stale_epoch = int(srv.epoch[1])
+    stale_seq = int(pkt.seqs[1])
+    # the client's ack is delayed; meanwhile a gap forces a resync bump
+    srv.request_resync(1)
+    tier = srv.sessions[z]
+    part, row = tier._route(1)
+    before = np.asarray(part.acked[row]).copy()
+    fresh_before = bool(srv.epoch_fresh[1])
+    srv.ack(1, z, stale_epoch, stale_seq, tick=2)      # stale: dropped
+    assert (np.asarray(part.acked[row]) == before).all()
+    assert bool(srv.epoch_fresh[1]) == fresh_before
+    # a current-epoch ack for the re-shipped packet lands normally
+    pkts2 = srv.tick(deliver, tick=1)
+    (z2, pkt2), = [(z, p) for z, p in pkts2 if p.seqs[1] >= 0][:1]
+    srv.ack(1, z2, int(srv.epoch[1]), int(pkt2.seqs[1]), tick=3)
+    part2, row2 = srv.sessions[z2]._route(1)
+    assert np.asarray(part2.acked[row2]).any()
+
+
+def test_resync_rolls_back_only_the_owning_shard_rows():
+    """A resync (rollback) for one client must only touch that client's
+    row on its owning shard: every other shard's sync state — and every
+    other client's row — stays byte-identical."""
+    sc = _shard_scenario(faults=FaultModel(seed=1))
+    srv = _shard_server(sc, 3)
+    srv.refresh(_toy_store())
+    for c in range(4):
+        srv.join(c, (2.0 * c - 3.0, 1.5, 0.0), 10.0)
+    srv.tick(np.ones(4, bool), tick=0)
+    tier = srv.sessions[0]
+    home = int(tier.roster.assign[2])
+    snap = {s: np.asarray(p.sync.synced_version).copy()
+            for s, p in enumerate(tier.parts) if p is not None}
+    srv.request_resync(2)
+    for s, p in enumerate(tier.parts):
+        if p is None:
+            continue
+        now = np.asarray(p.sync.synced_version)
+        if s != home:
+            assert (now == snap[s]).all(), f"shard {s} perturbed"
+        else:
+            row = int(tier.roster.row[2])
+            keep = np.ones(now.shape[0], bool)
+            keep[row] = False
+            assert (now[keep] == snap[s][keep]).all()
+
+
+def test_shard_crash_rebuilds_only_that_shards_clients():
+    """A session-shard host dies mid-run: exactly its clients get fresh
+    epochs (full catch-up next tick); clients on surviving shards keep
+    their epochs and streams.  After the drain the maps are
+    content-identical to the crash-free replay."""
+    fm = FaultModel(seed=9, loss_prob=0.1)
+    sc = _shard_scenario(faults=fm)
+    srv = _shard_server(sc, 2)          # round-robin: shard1 = clients 1,3
+    eng = ScenarioEngine(_shard_scenario(faults=fm), server=srv)
+    state = {"n": 0, "ep": None}
+
+    def hook(t):
+        state["n"] += 1
+        if state["n"] == 4:                 # end of the 4th tick
+            srv.crash_shard(1, tick=4)
+            state["ep"] = np.asarray(srv.epoch).copy()
+    eng.tick_hook = hook
+    eng.run()
+    ep_at_crash = state["ep"]
+    # only shard-1 clients (1, 3) were bumped by the crash
+    bumped = np.asarray(srv.roster.assign) == 1
+    assert (ep_at_crash[bumped] >= 2).all()
+    assert (np.asarray(srv.epoch)[bumped] >= ep_at_crash[bumped]).all()
+
+    clean = ScenarioEngine(_shard_scenario(faults=fm),
+                           server=_shard_server(sc, 2))
+    clean.run()
+    # surviving-shard clients never saw a crash-driven bump
+    assert (np.asarray(srv.epoch)[~bumped]
+            == np.asarray(clean.server.epoch)[~bumped]).all()
+    for cid in eng.sessions:
+        got = _canonical_map(eng.sessions[cid].dev.local)
+        want = _canonical_map(clean.sessions[cid].dev.local)
+        assert got == want, f"client {cid} diverged after shard crash"
+    assert eng.world.live_ids() == clean.world.live_ids()

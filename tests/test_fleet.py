@@ -430,3 +430,214 @@ def test_ack_tick_parity_with_per_client_acks():
         assert all(len(q) == 0 for q in sb.inflight)
     assert np.array_equal(a.epoch_fresh, b.epoch_fresh)
     assert np.array_equal(a.last_ack_tick, b.last_ack_tick)
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded session tier (server/mesh.py)
+def test_mesh_tier_byte_identity_vs_unsharded():
+    """MeshSessionTier (client axis split over S session shards) must be
+    byte-identical to the single-device SessionManager: every per-client
+    packet field, the seq streams, and the host bookkeeping (acked /
+    inflight / deletion debt) — across ticks with interleaved mutations,
+    acks, rollbacks, resets, and slot reuse."""
+    from repro.server.mesh import ClientRoster, MeshSessionTier
+    C, N = 12, KN.server_capacity
+    store = synth_store(28, cap=N, seed=5)
+    rng = np.random.default_rng(2)
+    poses = rng.uniform(-3, 3, (C, 3)).astype(np.float32)
+    subs = rng.random(C) < 0.85
+
+    ref = SessionManager(knobs=KN, n_clients=C, capacity=N, budget=8,
+                         subscribed=subs.copy(), user_pos=poses.copy())
+    tier = MeshSessionTier(knobs=KN, capacity=N, budget=8,
+                           roster=ClientRoster.round_robin(C, 4))
+    tier.set_all(subscribed=subs, user_pos=poses)
+
+    epoch = np.arange(C, dtype=np.int64)
+    for t in range(5):
+        deliv = rng.random(C) < 0.9
+        pa = ref.collect(store, deliverable=deliv, zone=1, epoch=epoch,
+                         now=t)
+        pb = tier.collect(store, deliverable=deliv, zone=1, epoch=epoch,
+                          now=t)
+        np.testing.assert_array_equal(pa.counts, pb.counts)
+        np.testing.assert_array_equal(pa.nbytes, pb.nbytes)
+        np.testing.assert_array_equal(pa.seqs, pb.seqs)
+        np.testing.assert_array_equal(pa.tomb_counts(), pb.tomb_counts())
+        assert pa.total_nbytes == pb.total_nbytes
+        for c in range(C):
+            ua, ub = pa.packet_for(c), pb.packet_for(c)
+            assert (ua.count, ua.nbytes, ua.tick) \
+                == (ub.count, ub.nbytes, ub.tick)
+            if ua.count:
+                assert (ua.zone, ua.seq, ua.epoch) \
+                    == (ub.zone, ub.seq, ub.epoch)
+                for f in ("oid", "embed", "label", "points", "n_points",
+                          "centroid", "version", "valid"):
+                    np.testing.assert_array_equal(
+                        np.asarray(getattr(ua.batch, f)),
+                        np.asarray(getattr(ub.batch, f)), err_msg=f)
+        # interleave the control plane identically on both
+        for c in range(C):
+            if int(pa.seqs[c]) >= 0 and rng.random() < 0.6:
+                ref.ack(c, int(pa.seqs[c]))
+                tier.ack(c, int(pb.seqs[c]))
+        if t == 1:
+            ref.rollback(3), tier.rollback(3)
+        if t == 2:
+            ref.reset_client(5, keep_seq=True)
+            tier.reset_client(5, keep_seq=True)
+            ref.reset_slots([0, 7]), tier.reset_slots([0, 7])
+        if t == 3:
+            store = bump_versions(store, [1, 4, 9])
+        assert ref.dirty == tier.dirty
+        np.testing.assert_array_equal(ref.acked, tier_acked(tier))
+        np.testing.assert_array_equal(ref.deletion_debt(store),
+                                      tier.deletion_debt(store))
+        for c in range(C):
+            assert ref.oldest_unacked_tick(c) == tier.oldest_unacked_tick(c)
+
+
+def tier_acked(tier):
+    """Assemble a sharded tier's [C, N] acked mirror for comparison."""
+    out = np.zeros((tier.n_clients, tier.capacity), np.int32)
+    for s, part in enumerate(tier.parts):
+        if part is not None:
+            out[tier.roster.members[s]] = part.acked
+    return out
+
+
+def test_mesh_fleet_server_end_to_end_byte_identity():
+    """FleetServer(n_session_shards=S) vs the default single-device tier:
+    identical wire packets through joins, pose churn (zone crossings), and
+    the batched-ack tick loop."""
+    def build(shards):
+        srv = FleetServer(knobs=KN, embed_dim=E, n_clients=6,
+                          grid=ZoneGrid.for_room(8.0, 2, 2), budget=8,
+                          n_session_shards=shards)
+        rng = np.random.default_rng(4)
+        for c in range(6):
+            srv.join(c, rng.uniform(-3, 3, 3).astype(np.float32), 2.0)
+        return srv
+
+    a, b = build(1), build(3)
+    store = synth_store(24, cap=a.zoned.zone_capacity)
+    rng = np.random.default_rng(9)
+    deliverable = np.ones((6,), bool)
+    for t in range(4):
+        a.refresh(store), b.refresh(store)
+        poses = rng.uniform(-3.5, 3.5, (6, 3)).astype(np.float32)
+        a.set_poses(poses, 2.0), b.set_poses(poses, 2.0)
+        np.testing.assert_array_equal(a.subscribed, b.subscribed)
+        pa = a.tick(deliverable, tick=t)
+        pb = b.tick(deliverable, tick=t)
+        assert [z for z, _ in pa] == [z for z, _ in pb]
+        for (z, qa), (_, qb) in zip(pa, pb):
+            np.testing.assert_array_equal(qa.nbytes, qb.nbytes)
+            np.testing.assert_array_equal(qa.seqs, qb.seqs)
+            for c in range(6):
+                ua, ub = qa.packet_for(c), qb.packet_for(c)
+                assert (ua.count, ua.nbytes) == (ub.count, ub.nbytes)
+                if ua.count:
+                    np.testing.assert_array_equal(
+                        np.asarray(ua.batch.points),
+                        np.asarray(ub.batch.points))
+        a.ack_tick(pa, tick=t), b.ack_tick(pb, tick=t)
+        store = bump_versions(store, [t, t + 3])
+    np.testing.assert_array_equal(a.epoch, b.epoch)
+    assert a.blocked_tombstone_oids(tick=5) == b.blocked_tombstone_oids(tick=5)
+
+
+def test_client_shard_affinity():
+    """Zone-affinity partition: a client lands on the shard holding the
+    majority of its subscribed zones; unsubscribed clients round-robin."""
+    from repro.distributed.sharding import client_shard_affinity
+    subs = np.zeros((4, 8), bool)
+    subs[0, [0, 2, 4]] = True          # zones 0,2,4 -> shard 0 under z%2
+    subs[1, [1, 3]] = True             # -> shard 1
+    subs[2, [0, 1, 3]] = True          # majority odd -> shard 1
+    # client 3 subscribes nothing -> 3 % 2 = 1
+    a = client_shard_affinity(subs, 2)
+    assert a.tolist() == [0, 1, 1, 1]
+    # explicit zone->shard map overrides the z % S default
+    a2 = client_shard_affinity(subs, 2, zone_shards=np.zeros(8, np.int64))
+    assert a2.tolist() == [0, 0, 0, 1]
+
+
+# ---------------------------------------------------------------------------
+# satellite bugfix: zone-crossing mid-flight staleness
+def _framed_server(n_clients=1):
+    srv = FleetServer(knobs=KN, embed_dim=E, n_clients=n_clients,
+                      grid=ZoneGrid.for_room(8.0, 2, 1), budget=8)
+    return srv
+
+
+def test_zone_crossing_midflight_never_applies_stale_row():
+    """A packet in the air when its client leaves the zone must be DROPPED
+    at the device on arrival — never ingested then pruned a tick later.
+    The seq stream still advances and the cumulative ack still goes out,
+    so re-entry packets (seq continues: the server kept the stream via
+    reset_client(keep_seq=True)) are not mistaken for a gap."""
+    srv = _framed_server()
+    # client in zone 0 (left half of the 2x1 grid)
+    srv.join(0, np.array([-2.0, 1.5, 0.0], np.float32), 1.0)
+    store = synth_store(20, x_range=(-4, -1))   # all objects in zone 0
+    srv.refresh(store)
+    sess = ClientSession(dev=DeviceClient(knobs=KN, embed_dim=E),
+                         net=NetworkModel(rtt_ms=20.0, bandwidth_mbps=100.0),
+                         knobs=KN, cid=0)
+    sess.zone_subs = srv.subscribed[0].copy()
+
+    packets = srv.tick(np.ones(1, bool), tick=0)
+    assert packets and int(packets[0][1].counts[0]) > 0
+    in_air = packets[0][1].packet_for(0)
+
+    # the client crosses to zone 1 BEFORE the packet lands
+    srv.set_client_pose(0, np.array([2.0, 1.5, 0.0], np.float32), 1.0)
+    sess.zone_subs = srv.subscribed[0].copy()
+    assert not sess.zone_subs[0] and sess.zone_subs[1]
+
+    live0 = int(np.asarray(sess.dev.local.active).sum())
+    sess._receive(0.0, in_air)
+    # dropped at delivery: nothing ingested, no stale-zone row in the map
+    assert int(np.asarray(sess.dev.local.active).sum()) == live0 == 0
+    assert sess.delivered == 0 and sess.down_bytes == 0
+    assert sess.stale_drops == 1
+    # ...but the protocol position advanced: ack emitted, seq consumed
+    acks = sess.drain_acks()
+    assert acks == [(0, int(in_air.epoch), int(in_air.seq))]
+    assert sess._expect[0] == in_air.seq + 1
+
+    # re-entry: the client returns to zone 0 — the catch-up re-ships on the
+    # SAME seq stream (keep_seq survived the round trip) and applies
+    # cleanly, no gap, no resync
+    srv.set_client_pose(0, np.array([-2.0, 1.5, 0.0], np.float32), 1.0)
+    sess.zone_subs = srv.subscribed[0].copy()
+    pk2 = srv.tick(np.ones(1, bool), tick=1)
+    delivered_any = False
+    for z, pkt in pk2:
+        u = pkt.packet_for(0)
+        if u.count:
+            assert u.seq == in_air.seq + 1   # stream continued, not reset
+            sess._receive(1.0, u)
+            delivered_any = True
+    assert delivered_any
+    assert sess.stale_drops == 1            # no further drops
+    assert sess.resyncs == 0 and not sess._gap_since
+    assert int(np.asarray(sess.dev.local.active).sum()) > 0
+
+
+def test_zone_gate_off_by_default():
+    """Legacy callers that never set zone_subs keep the old behavior:
+    framed packets from any zone apply (the gate arms only when the
+    subscription view is wired)."""
+    srv = _framed_server()
+    srv.join(0, np.array([-2.0, 1.5, 0.0], np.float32), 1.0)
+    srv.refresh(synth_store(12, x_range=(-4, -1)))
+    sess = ClientSession(dev=DeviceClient(knobs=KN, embed_dim=E),
+                         net=NetworkModel(rtt_ms=20.0, bandwidth_mbps=100.0),
+                         knobs=KN, cid=0)
+    assert sess.zone_subs is None
+    packets = srv.tick(np.ones(1, bool), tick=0)
+    sess._receive(0.0, packets[0][1].packet_for(0))
+    assert sess.delivered == 1 and sess.stale_drops == 0

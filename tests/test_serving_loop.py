@@ -367,3 +367,72 @@ def test_loadgen_latency_accounting():
     assert lg.e2e_ms == [pytest.approx(25.0)]
     rep = lg.record("test")
     assert rep["e2e_ms"]["p99"] == pytest.approx(25.0)
+
+
+def test_donate_auto_policy_resolution():
+    """donate=None resolves through the one backend-aware policy helper
+    (kernels.ops.donate_default): OFF on CPU — where a donated dispatch
+    blocks on the donated buffer's producer and serializes the overlap —
+    ON for TPU/GPU.  Explicit True/False are untouched."""
+    from repro.kernels.ops import donate_default
+    from repro.server.session import SessionManager
+    want = donate_default()
+    assert want == (jax.default_backend() not in ("cpu",))
+    sm = SessionManager(knobs=KN, n_clients=2, capacity=CAP, donate=None)
+    assert sm.donate == want
+    assert SessionManager(knobs=KN, n_clients=2, capacity=CAP,
+                          donate=True).donate is True
+    assert SessionManager(knobs=KN, n_clients=2, capacity=CAP,
+                          donate=False).donate is False
+    # FleetServer passes the auto policy through to every zone session
+    srv = FleetServer(knobs=KN, embed_dim=E, n_clients=2,
+                      grid=ZoneGrid.for_room(8.0, 2, 1), donate=None)
+    assert all(s.donate == want for s in srv.sessions)
+    # the engine's overlapped mode asks for auto (bug was donate=True
+    # unconditionally: the async loop lost its overlap win on CPU)
+    from repro.sim.engine import ScenarioEngine
+    from repro.sim.scenario import (ClientSpec, GridSpec, NetTrace,
+                                    PoseTrack, Scenario)
+    sc = Scenario(seed=0, n_ticks=1, embed_dim=E, knobs=KN,
+                  grid=GridSpec(room=8.0, nx=1, nz=1),
+                  clients=(ClientSpec(cid=0, net=NetTrace(), 
+                                      track=PoseTrack()),))
+    eng = ScenarioEngine(sc, async_loop=True)
+    assert all(s.donate == want for s in eng.server.sessions)
+    eng2 = ScenarioEngine(sc, async_loop=False)
+    assert all(s.donate is False for s in eng2.server.sessions)
+
+
+def test_serving_loop_sharded_session_tier_byte_identity():
+    """The sharded session tier threads through the serving loop's
+    tick_start/tick_finish schedule unchanged: same per-tick sent bytes and
+    identical fleet sync state as the single-device tier, in both the
+    fenced and overlapped schedules."""
+    def run(shards, overlap):
+        store = _store()
+        srv = FleetServer(knobs=KN, embed_dim=E, n_clients=6,
+                          grid=ZoneGrid.for_room(16.0, 2, 2), budget=16,
+                          n_session_shards=shards, donate=None)
+        rng = np.random.default_rng(5)
+        for c in range(6):
+            srv.join(c, rng.uniform(-6, 6, 3).astype(np.float32), 6.0)
+        snap = SnapshotStore.of(store) if overlap \
+            else SnapshotStore(front=store)
+        loop = ServingLoop(server=srv, store=snap, ingest=_stream(seed=11),
+                           overlap=overlap)
+        loop.run(6)
+        return loop.sent_bytes, srv
+
+    for overlap in (False, True):
+        s1, srv1 = run(1, overlap)
+        s3, srv3 = run(3, overlap)
+        assert s1 == s3, (overlap, s1, s3)
+        # per-zone sync state identical after reassembly
+        for z, (a, b) in enumerate(zip(srv1.sessions, srv3.sessions)):
+            va = np.asarray(a.sync.synced_version)
+            vb = np.zeros_like(va)
+            for s, part in enumerate(b.parts):
+                if part is not None:
+                    vb[b.roster.members[s]] = np.asarray(
+                        part.sync.synced_version)
+            np.testing.assert_array_equal(va, vb, err_msg=f"zone {z}")
